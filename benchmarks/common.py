@@ -1,0 +1,81 @@
+"""Shared benchmark helpers: dataset prep, partition cache, CSV emission."""
+from __future__ import annotations
+
+import sys
+import time
+
+import numpy as np
+
+from repro.core.partition import (
+    adadne,
+    distributed_ne,
+    edge_cut_to_edge_assignment,
+    hash2d_partition,
+    ldg_edge_cut,
+    random_edge_partition,
+)
+from repro.core.sampling import (
+    EdgeCutClient,
+    GatherApplyClient,
+    SamplingServer,
+    VertexRouter,
+)
+from repro.graph import build_partitions, named_dataset
+
+_CACHE: dict = {}
+
+
+def emit(name: str, value: float, derived: str = "") -> None:
+    print(f"{name},{value:.3f},{derived}", flush=True)
+
+
+def dataset(name: str, scale: float = 0.25, feat_dim: int = 32, num_classes: int = 8):
+    key = ("ds", name, scale, feat_dim, num_classes)
+    if key not in _CACHE:
+        _CACHE[key] = named_dataset(
+            name, feat_dim=feat_dim, num_classes=num_classes, seed=0, scale=scale
+        )
+    return _CACHE[key]
+
+
+PARTITIONERS = {
+    "AdaDNE": adadne,
+    "DistributedNE": distributed_ne,
+    "Hash2D": hash2d_partition,
+    "Random": random_edge_partition,
+}
+
+
+def partition(g, alg: str, parts: int, seed: int = 0):
+    key = ("part", id(g), alg, parts, seed)
+    if key not in _CACHE:
+        t0 = time.perf_counter()
+        ep = PARTITIONERS[alg](g, parts, seed=seed)
+        _CACHE[key] = (ep, time.perf_counter() - t0)
+    return _CACHE[key]
+
+
+def glisp_client(g, parts: int, alg: str = "AdaDNE", seed: int = 0):
+    key = ("client", id(g), alg, parts, seed)
+    if key not in _CACHE:
+        ep, _ = partition(g, alg, parts, seed)
+        built = build_partitions(g, ep, parts)
+        _CACHE[key] = GatherApplyClient(
+            [SamplingServer(p, seed=seed) for p in built],
+            VertexRouter(g, ep, parts),
+            seed=seed,
+        )
+    return _CACHE[key]
+
+
+def edgecut_client(g, parts: int, seed: int = 0):
+    key = ("ecclient", id(g), parts, seed)
+    if key not in _CACHE:
+        vp = ldg_edge_cut(g, parts, seed=seed)
+        built = build_partitions(g, edge_cut_to_edge_assignment(g, vp), parts)
+        _CACHE[key] = EdgeCutClient(
+            [SamplingServer(p, seed=seed, cost_model="scan") for p in built],
+            vp.astype(np.int64),
+            seed=seed,
+        )
+    return _CACHE[key]

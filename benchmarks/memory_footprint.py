@@ -1,0 +1,25 @@
+"""Paper Table III: graph-server memory footprint — GLISP's compact
+structure vs the per-etype + explicit-local-id layout of existing systems."""
+from __future__ import annotations
+
+from benchmarks.common import dataset, emit, partition
+from repro.graph import build_partitions
+from repro.graph.graph import naive_partition_memory_bytes
+
+CASES = ["ogbn-products", "wikikg90m", "twitter-2010", "ogbn-paper"]
+
+
+def run():
+    for ds in CASES:
+        g = dataset(ds)
+        ep, _ = partition(g, "AdaDNE", 4)
+        parts = build_partitions(g, ep, 4)
+        glisp = sum(p.memory_bytes() for p in parts)
+        naive = naive_partition_memory_bytes(g, ep, 4)
+        emit(f"table3/{ds}/GLISP_MB", glisp / 2**20)
+        emit(f"table3/{ds}/NaiveLayout_MB", naive / 2**20)
+        emit(f"table3/{ds}/ratio", naive / glisp)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,47 @@
+"""Paper Table II: RF / VB / EB / runtime of ParMETIS-stand-in (LDG edge-cut),
+DistributedNE and AdaDNE across datasets and partition counts."""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import dataset, emit
+from repro.core.partition import adadne, distributed_ne, ldg_edge_cut
+from repro.graph.metrics import (
+    metrics_from_edge_assignment,
+    metrics_from_vertex_assignment,
+)
+
+CASES = [
+    ("ogbn-products", 2),
+    ("ogbn-products", 4),
+    ("wikikg90m", 8),
+    ("twitter-2010", 8),
+    ("ogbn-paper", 8),
+]
+
+
+def run():
+    for ds, parts in CASES:
+        g = dataset(ds)
+        for alg_name, fn, edge_cut in (
+            ("LDG(edge-cut)", ldg_edge_cut, True),
+            ("DistributedNE", distributed_ne, False),
+            ("AdaDNE", adadne, False),
+        ):
+            t0 = time.perf_counter()
+            assign = fn(g, parts, seed=0)
+            dt = time.perf_counter() - t0
+            m = (
+                metrics_from_vertex_assignment(g, assign, parts)
+                if edge_cut
+                else metrics_from_edge_assignment(g, assign, parts)
+            )
+            tag = f"table2/{ds}/p{parts}/{alg_name}"
+            emit(tag + "/RF", m["RF"])
+            emit(tag + "/VB", m["VB"])
+            emit(tag + "/EB", m["EB"])
+            emit(tag + "/time_s", dt)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,71 @@
+"""Collect experiments/dryrun/*.json into the EXPERIMENTS.md roofline table.
+
+    PYTHONPATH=src python -m benchmarks.roofline_table [--dir experiments/dryrun]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(dir_: str):
+    rows = []
+    for fn in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        with open(fn) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def fmt_ms(s: float) -> str:
+    return f"{s*1e3:.2f}"
+
+
+def table(rows, mesh="16x16"):
+    out = [
+        "| arch | shape | mem/dev GiB | compute ms | memory ms | collective ms "
+        "| dominant | useful/HLO flops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        if r.get("mesh") != mesh or r.get("skipped"):
+            continue
+        rf = r["roofline"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | "
+            f"{r['memory']['peak_bytes_per_device']/2**30:.2f} | "
+            f"{fmt_ms(rf['compute_s'])} | {fmt_ms(rf['memory_s'])} | "
+            f"{fmt_ms(rf['collective_s'])} | {rf['dominant'].replace('_s','')} | "
+            f"{rf['useful_flops_ratio']:.2f} |"
+        )
+    return "\n".join(out)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--mesh", default="16x16")
+    args = ap.parse_args()
+    rows = load(args.dir)
+    print(table(rows, args.mesh))
+    # summary: worst roofline fraction / most collective-bound
+    scored = []
+    for r in rows:
+        if r.get("mesh") != args.mesh or r.get("skipped"):
+            continue
+        rf = r["roofline"]
+        bound = max(rf["compute_s"], rf["memory_s"], rf["collective_s"])
+        frac = rf["compute_s"] / bound if bound else 0
+        coll_frac = rf["collective_s"] / bound if bound else 0
+        scored.append((r["arch"], r["shape"], frac, coll_frac, rf["dominant"]))
+    print("\n# lowest compute fraction (worst roofline):")
+    for a, s, f, c, d in sorted(scored, key=lambda x: x[2])[:5]:
+        print(f"#   {a} × {s}: compute/bound={f:.2f} dominant={d}")
+    print("# most collective-bound:")
+    for a, s, f, c, d in sorted(scored, key=lambda x: -x[3])[:5]:
+        print(f"#   {a} × {s}: collective/bound={c:.2f}")
+
+
+if __name__ == "__main__":
+    main()

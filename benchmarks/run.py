@@ -1,0 +1,54 @@
+"""Benchmark orchestrator — one module per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--only table2,fig9,...]
+
+Prints ``name,value,derived`` CSV rows (one per metric).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+SUITES = [
+    ("table2", "benchmarks.partition_quality"),
+    ("fig9", "benchmarks.sampling_speed"),
+    ("fig10", "benchmarks.server_workload"),
+    ("table3", "benchmarks.memory_footprint"),
+    ("table4+fig11", "benchmarks.train_e2e"),
+    ("fig12", "benchmarks.scaling"),
+    ("fig13", "benchmarks.inference_speedup"),
+    ("fig14", "benchmarks.reorder_cache"),
+    ("fig15", "benchmarks.cache_policy"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated suite prefixes")
+    args = ap.parse_args()
+    only = [s for s in args.only.split(",") if s]
+
+    print("name,value,derived")
+    failures = []
+    for tag, module in SUITES:
+        if only and not any(tag.startswith(o) or o in tag for o in only):
+            continue
+        t0 = time.perf_counter()
+        try:
+            mod = __import__(module, fromlist=["run"])
+            mod.run()
+            print(f"# {tag} done in {time.perf_counter()-t0:.1f}s", flush=True)
+        except Exception:
+            failures.append(tag)
+            traceback.print_exc()
+            print(f"# {tag} FAILED", flush=True)
+    if failures:
+        print(f"# FAILURES: {failures}")
+        sys.exit(1)
+    print("# all benchmark suites completed")
+
+
+if __name__ == "__main__":
+    main()

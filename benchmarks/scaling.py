@@ -1,0 +1,45 @@
+"""Paper Fig. 12: synchronous data-parallel scaling of GNN training.
+
+Real multi-worker scaling needs the cluster; here we measure the scaling of
+the *samplable* work: wall-time per epoch-equivalent as the number of
+simulated trainer shards grows (each shard samples its own seed slice; the
+compute step is shared).  Reports the speedup slope (paper: ~0.8)."""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, glisp_client
+from repro.models.gnn import GNNModel, subgraph_to_batch
+
+
+def run():
+    g = dataset("wikikg90m", scale=0.15)
+    client = glisp_client(g, 8)
+    rng = np.random.default_rng(0)
+    seeds_all = rng.choice(g.num_vertices, 2048, replace=False)
+    base = None
+    for trainers in (1, 2, 4, 8):
+        shard = 2048 // trainers
+        t0 = time.perf_counter()
+        # one synchronous round: every trainer samples its shard; the slowest
+        # shard bounds the round (simulated sequentially, take max shard time)
+        times = []
+        for t in range(trainers):
+            ts = time.perf_counter()
+            client.sample_khop(
+                seeds_all[t * shard : (t + 1) * shard], [15, 10, 5]
+            )
+            times.append(time.perf_counter() - ts)
+        round_time = max(times)  # synchronous barrier
+        throughput = 2048 / (round_time * trainers) * trainers  # seeds/s/round
+        eff = 2048 / round_time
+        if base is None:
+            base = eff
+        emit(f"fig12/trainers{trainers}/speedup", eff / base)
+    emit("fig12/ideal_slope", 1.0)
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,39 @@
+"""Paper Fig. 10: normalized per-server workload, balanced seeds — GLISP vs
+DistDGL-style; plus the GLISP-P0 worst case (all seeds from partition 0)."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks.common import dataset, edgecut_client, emit, glisp_client
+
+CASES = [("wikikg90m", 8), ("twitter-2010", 8), ("ogbn-paper", 8)]
+FANOUTS = [15, 10, 5]
+
+
+def run():
+    rng = np.random.default_rng(2)
+    for ds, parts in CASES:
+        g = dataset(ds)
+        gl = glisp_client(g, parts)
+        ec = edgecut_client(g, parts)
+        seeds = rng.choice(g.num_vertices, 1024, replace=False)
+        for name, client, direction in (("GLISP", gl, "out"), ("DistDGL", ec, "in")):
+            client.reset_stats()
+            client.sample_khop(seeds, FANOUTS, weighted=True, direction=direction)
+            wl = client.server_workloads()
+            norm = wl / wl.min()
+            emit(f"fig10/{ds}/{name}/max_norm_load", norm.max())
+            emit(f"fig10/{ds}/{name}/std_norm_load", norm.std())
+        # worst case: all seeds hosted on partition 0
+        gl.reset_stats()
+        p0 = gl.servers[0].part
+        seeds0 = p0.local_to_global(
+            rng.choice(p0.num_vertices, min(1024, p0.num_vertices), replace=False)
+        )
+        gl.sample_khop(seeds0, FANOUTS, weighted=True, direction="out")
+        wl = gl.server_workloads()
+        emit(f"fig10/{ds}/GLISP-P0/max_norm_load", (wl / wl.min()).max())
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,17 @@
+from repro.core.inference.store import ChunkedEmbeddingStore, IOCost
+from repro.core.inference.cache import TwoLevelCache, CachePolicy
+from repro.core.inference.engine import (
+    LayerwiseInferenceEngine,
+    samplewise_inference,
+    assign_inference_owners,
+)
+
+__all__ = [
+    "ChunkedEmbeddingStore",
+    "IOCost",
+    "TwoLevelCache",
+    "CachePolicy",
+    "LayerwiseInferenceEngine",
+    "samplewise_inference",
+    "assign_inference_owners",
+]

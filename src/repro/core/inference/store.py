@@ -1,0 +1,125 @@
+"""Chunked embedding store — the Zarr-on-DFS stand-in (paper §III-D).
+
+The full embedding matrix of one GNN layer is chunked into fixed-row files
+(paper: chunk 32768 rows, Blosclz-compressed, on HDFS).  Here chunks are .npy
+files (optionally zlib-compressed .npz) in a local directory, with explicit
+read counters and an I/O *cost model* so benchmarks can report modeled
+DFS/disk/memory retrieval times without a real HDFS cluster:
+
+    IOCost.dfs_ms    per-chunk read from the remote store (paper: HDFS)
+    IOCost.disk_ms   per-chunk read from the worker-local static cache (disk)
+    IOCost.mem_ms    per-chunk hit in the dynamic in-memory cache
+"""
+from __future__ import annotations
+
+import os
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.utils import ceil_div
+
+__all__ = ["ChunkedEmbeddingStore", "IOCost"]
+
+
+@dataclass
+class IOCost:
+    # Defaults modeled on the paper's setting: HDFS round-trip ≫ local SSD ≫
+    # memory.  Only *ratios* matter for speedup numbers.
+    dfs_ms: float = 20.0
+    disk_ms: float = 2.0
+    mem_ms: float = 0.05
+
+
+@dataclass
+class StoreStats:
+    chunk_writes: int = 0
+    chunk_reads: int = 0  # reads that actually hit this store
+    rows_read: int = 0
+
+
+class ChunkedEmbeddingStore:
+    """One layer's [N, D] embedding matrix as fixed-size row chunks.
+
+    Rows are indexed by the *reordered* consecutive local id (paper §III-D:
+    the reorder algorithm assigns the IDs; chunk = id // chunk_rows)."""
+
+    def __init__(
+        self,
+        path: str,
+        num_rows: int,
+        dim: int,
+        chunk_rows: int = 32768,
+        compress: bool = False,
+        dtype=np.float32,
+    ):
+        self.path = path
+        self.num_rows = num_rows
+        self.dim = dim
+        self.chunk_rows = chunk_rows
+        self.compress = compress
+        self.dtype = dtype
+        self.num_chunks = ceil_div(num_rows, chunk_rows)
+        self.stats = StoreStats()
+        os.makedirs(path, exist_ok=True)
+
+    # -- chunk addressing ----------------------------------------------------
+    def chunk_of(self, rows: np.ndarray) -> np.ndarray:
+        return np.asarray(rows) // self.chunk_rows
+
+    def _chunk_file(self, c: int) -> str:
+        return os.path.join(
+            self.path, f"chunk_{c:06d}.{'npz' if self.compress else 'npy'}"
+        )
+
+    # -- IO -------------------------------------------------------------------
+    def write_rows(self, rows: np.ndarray, values: np.ndarray) -> None:
+        """Write rows (values[i] -> row rows[i]); groups by chunk,
+        read-modify-write per chunk (workers write disjoint row ranges)."""
+        rows = np.asarray(rows, dtype=np.int64)
+        order = np.argsort(rows, kind="stable")
+        rows, values = rows[order], values[order]
+        chunks = rows // self.chunk_rows
+        for c in np.unique(chunks):
+            sel = chunks == c
+            block = self._read_chunk_raw(int(c), allow_missing=True)
+            block[rows[sel] - c * self.chunk_rows] = values[sel]
+            self._write_chunk_raw(int(c), block)
+
+    def _write_chunk_raw(self, c: int, block: np.ndarray) -> None:
+        fn = self._chunk_file(c)
+        if self.compress:
+            np.savez_compressed(fn[:-4], block=block)
+        else:
+            np.save(fn, block)
+        self.stats.chunk_writes += 1
+
+    def _read_chunk_raw(self, c: int, allow_missing: bool = False) -> np.ndarray:
+        fn = self._chunk_file(c)
+        nrows = min(self.chunk_rows, self.num_rows - c * self.chunk_rows)
+        if not os.path.exists(fn):
+            if allow_missing:
+                return np.zeros((nrows, self.dim), dtype=self.dtype)
+            raise FileNotFoundError(fn)
+        if self.compress:
+            with np.load(fn) as z:
+                return z["block"]
+        return np.load(fn)
+
+    def read_chunk(self, c: int) -> np.ndarray:
+        """Counted read — a 'remote DFS fetch' in the cost model."""
+        block = self._read_chunk_raw(c)
+        self.stats.chunk_reads += 1
+        self.stats.rows_read += block.shape[0]
+        return block
+
+    def read_rows_direct(self, rows: np.ndarray) -> np.ndarray:
+        """Uncached row gather (the Fig.-14a baseline: read straight from
+        HDFS, one chunk fetch per distinct chunk touched)."""
+        rows = np.asarray(rows, dtype=np.int64)
+        out = np.empty((rows.shape[0], self.dim), dtype=self.dtype)
+        for c in np.unique(rows // self.chunk_rows):
+            block = self.read_chunk(int(c))
+            sel = (rows // self.chunk_rows) == c
+            out[sel] = block[rows[sel] - c * self.chunk_rows]
+        return out

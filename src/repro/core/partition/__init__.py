@@ -1,0 +1,18 @@
+from repro.core.partition.hash_part import (
+    random_edge_partition,
+    hash2d_partition,
+    vertex_hash_partition,
+)
+from repro.core.partition.ldg import ldg_edge_cut, edge_cut_to_edge_assignment
+from repro.core.partition.dne import NeighborExpansionPartitioner, distributed_ne, adadne
+
+__all__ = [
+    "random_edge_partition",
+    "hash2d_partition",
+    "vertex_hash_partition",
+    "ldg_edge_cut",
+    "edge_cut_to_edge_assignment",
+    "NeighborExpansionPartitioner",
+    "distributed_ne",
+    "adadne",
+]

@@ -1,0 +1,21 @@
+from repro.core.sampling.algorithms import algorithm_d, algorithm_a_es, uniform_sample
+from repro.core.sampling.service import (
+    SamplingServer,
+    VertexRouter,
+    GatherApplyClient,
+    EdgeCutClient,
+    SampledHop,
+    SampledSubgraph,
+)
+
+__all__ = [
+    "algorithm_d",
+    "algorithm_a_es",
+    "uniform_sample",
+    "SamplingServer",
+    "VertexRouter",
+    "GatherApplyClient",
+    "EdgeCutClient",
+    "SampledHop",
+    "SampledSubgraph",
+]

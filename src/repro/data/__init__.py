@@ -1,0 +1,4 @@
+from repro.data.tokens import SyntheticTokenStream, lm_input_specs
+from repro.data.graph_loader import SeedBatchLoader
+
+__all__ = ["SyntheticTokenStream", "lm_input_specs", "SeedBatchLoader"]

@@ -1,0 +1,5 @@
+# Pallas TPU kernels for the compute hot-spots (validated interpret=True on
+# CPU): segment_spmm (GNN aggregation), flash_attention, ssd_scan (Mamba-2).
+from repro.kernels.ops import INTERPRET, gnn_aggregate, mha_attention, ssd_scan
+
+__all__ = ["INTERPRET", "gnn_aggregate", "mha_attention", "ssd_scan"]

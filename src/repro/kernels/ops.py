@@ -1,0 +1,119 @@
+"""Jit'd public wrappers around the Pallas kernels.
+
+``INTERPRET`` defaults to True (this box is CPU; the kernels execute in
+Pallas interpret mode).  On a real TPU set REPRO_PALLAS_INTERPRET=0.
+Every wrapper has a matching pure-jnp oracle in ref.py, and tests assert
+allclose across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention import flash_attention_pallas
+from repro.kernels.ref import attention_ref, segment_spmm_ref, ssd_scan_ref
+from repro.kernels.segment_spmm import segment_spmm_pallas
+from repro.kernels.ssd_scan import ssd_scan_pallas
+
+INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
+
+__all__ = [
+    "INTERPRET",
+    "gnn_aggregate",
+    "mha_attention",
+    "ssd_scan",
+    "segment_spmm_pallas",
+    "flash_attention_pallas",
+    "ssd_scan_pallas",
+    "attention_ref",
+    "segment_spmm_ref",
+    "ssd_scan_ref",
+]
+
+
+def gnn_aggregate(
+    msg: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    use_kernel: bool = True,
+    block_rows: int = 128,
+    block_edges: int = 128,
+) -> jax.Array:
+    """Segment-sum of gathered neighbor messages (GNN aggregation hotspot)."""
+    if use_kernel:
+        return segment_spmm_pallas(
+            msg,
+            seg,
+            num_segments,
+            block_rows=block_rows,
+            block_edges=block_edges,
+            interpret=INTERPRET,
+        )
+    return segment_spmm_ref(msg, seg, num_segments)
+
+
+def mha_attention(
+    q: jax.Array,  # [B, Sq, H, D]
+    k: jax.Array,  # [B, Skv, Hkv, D]
+    v: jax.Array,  # [B, Skv, Hkv, D]
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_offset: int = 0,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Multi-head attention with GQA (H a multiple of Hkv), batched via vmap
+    over (batch, head) pairs of the single-head flash kernel."""
+    b, sq, h, d = q.shape
+    hkv = k.shape[2]
+    rep = h // hkv
+    kr = jnp.repeat(k, rep, axis=2)
+    vr = jnp.repeat(v, rep, axis=2)
+    qh = q.transpose(0, 2, 1, 3).reshape(b * h, sq, d)
+    kh = kr.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    vh = vr.transpose(0, 2, 1, 3).reshape(b * h, -1, d)
+    fn = flash_attention_pallas if use_kernel else attention_ref
+    kwargs = dict(causal=causal, window=window, kv_offset=kv_offset)
+    if use_kernel:
+        kwargs["interpret"] = INTERPRET
+    out = jax.vmap(lambda qq, kk, vv: fn(qq, kk, vv, **kwargs))(qh, kh, vh)
+    return out.reshape(b, h, sq, d).transpose(0, 2, 1, 3)
+
+
+def ssd_scan(
+    x: jax.Array,  # [B, S, H, P]
+    dt: jax.Array,  # [B, S, H]
+    A: jax.Array,  # [H]
+    B_: jax.Array,  # [B, S, G, N]
+    C: jax.Array,  # [B, S, G, N]
+    *,
+    chunk: int = 128,
+    use_kernel: bool = True,
+) -> jax.Array:
+    """Batched multi-head SSD scan; returns y [B, S, H, P]."""
+    bsz, S, H, P = x.shape
+    G, N = B_.shape[2], B_.shape[3]
+    rep = H // G
+    if not use_kernel:
+        return jax.vmap(lambda xx, dd, bb, cc: ssd_scan_ref(xx, dd, A, bb, cc))(
+            x, dt, B_, C
+        )
+    Bh = jnp.repeat(B_, rep, axis=2)  # [B, S, H, N]
+    Ch = jnp.repeat(C, rep, axis=2)
+    a = dt * A[None, None, :]  # [B, S, H]
+
+    def one(xx, aa, dd, bb, cc):
+        y, _ = ssd_scan_pallas(xx, aa, dd, bb, cc, chunk=chunk, interpret=INTERPRET)
+        return y
+
+    # flatten (batch, head)
+    xf = x.transpose(0, 2, 1, 3).reshape(bsz * H, S, P)
+    af = a.transpose(0, 2, 1).reshape(bsz * H, S)
+    df = dt.transpose(0, 2, 1).reshape(bsz * H, S)
+    bf = Bh.transpose(0, 2, 1, 3).reshape(bsz * H, S, N)
+    cf = Ch.transpose(0, 2, 1, 3).reshape(bsz * H, S, N)
+    yf = jax.vmap(one)(xf, af, df, bf, cf)
+    return yf.reshape(bsz, H, S, P).transpose(0, 2, 1, 3)

@@ -1,0 +1,85 @@
+"""Pure-jnp oracles for every Pallas kernel (tests assert allclose)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["segment_spmm_ref", "attention_ref", "ssd_scan_ref"]
+
+
+def segment_spmm_ref(msg: jax.Array, seg: jax.Array, num_segments: int) -> jax.Array:
+    """out[s] = sum_{e: seg[e]==s} msg[e]; seg==-1 rows are dropped."""
+    valid = (seg >= 0)[:, None].astype(msg.dtype)
+    return jax.ops.segment_sum(
+        msg * valid, jnp.maximum(seg, 0), num_segments=num_segments
+    )
+
+
+def attention_ref(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    kv_offset: int = 0,
+) -> jax.Array:
+    """Dense single-head attention oracle with causal/window masks."""
+    sq, d = q.shape
+    skv = k.shape[0]
+    s = (q.astype(jnp.float32) @ k.astype(jnp.float32).T) / (d**0.5)
+    q_pos = kv_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones_like(s, dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask, s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_scan_ref(
+    x: jax.Array,  # [S, H, P]   inputs per head
+    dt: jax.Array,  # [S, H]      softplus'd timestep
+    A: jax.Array,  # [H]         negative decay rate
+    B: jax.Array,  # [S, G, N]   input projection (G state groups)
+    C: jax.Array,  # [S, G, N]   output projection
+) -> jax.Array:
+    """Sequential SSD (Mamba-2) recurrence oracle:
+
+        state_s = exp(A h dt_s) * state_{s-1} + dt_s * B_s ⊗ x_s
+        y_s     = C_s · state_s
+
+    Shapes follow Mamba-2: H heads, P head dim, N state dim, G B/C groups
+    (heads per group = H // G).  Runs a lax.scan over time (exact)."""
+    S, H, P = x.shape
+    G, N = B.shape[1], B.shape[2]
+    heads_per_group = H // G
+    Bh = jnp.repeat(B, heads_per_group, axis=1)  # [S, H, N]
+    Ch = jnp.repeat(C, heads_per_group, axis=1)
+
+    decay = jnp.exp(A[None, :] * dt)  # [S, H]
+
+    def step(state, inp):
+        dec, dt_s, x_s, b_s, c_s = inp
+        state = state * dec[:, None, None] + (
+            dt_s[:, None, None] * x_s[:, :, None] * b_s[:, None, :]
+        )  # [H, P, N]
+        y = jnp.einsum("hpn,hn->hp", state, c_s)
+        return state, y
+
+    init = jnp.zeros((H, P, N), dtype=jnp.float32)
+    _, ys = jax.lax.scan(
+        step,
+        init,
+        (
+            decay.astype(jnp.float32),
+            dt.astype(jnp.float32),
+            x.astype(jnp.float32),
+            Bh.astype(jnp.float32),
+            Ch.astype(jnp.float32),
+        ),
+    )
+    return ys.astype(x.dtype)  # [S, H, P]

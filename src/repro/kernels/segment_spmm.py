@@ -1,0 +1,89 @@
+"""Pallas TPU kernel: segment-sum SpMM — the GNN aggregation hotspot.
+
+GNN message passing aggregates E gathered neighbor-message rows into B
+destination rows (``out[seg[e]] += msg[e]``).  On GPU this is a scatter-add
+(cuSPARSE / atomics); scatters are hostile to the TPU's systolic MXU, so we
+adapt the paper's aggregation hotspot TPU-natively (DESIGN.md §3):
+
+    the scatter becomes a block-tiled ONE-HOT MATMUL.  For an edge tile of
+    BM messages and a row tile of BN segments, ``onehot[bm, bn] =
+    (seg[bm] == row_ids[bn])`` and ``out_tile += onehot^T @ msg_tile`` —
+    a (BN × BM) · (BM × D) MXU contraction entirely in VMEM.
+
+Grid is (row_blocks, edge_blocks) with the edge axis innermost; the output
+tile is accumulated across the inner axis (revisited output block), written
+once zeroed at the first edge block.  ``seg`` must be sorted ascending for
+efficiency claims but correctness holds for any order.  Padding rows use
+``seg = -1`` (matches no row).
+
+VMEM budget per step: BM·D (msg) + BN·D (out) + BM·BN (onehot) floats —
+default BM=BN=128, D tiles of 128..512 keep it well under 16 MiB.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = ["segment_spmm_pallas"]
+
+
+def _kernel(seg_ref, msg_ref, out_ref, *, block_rows: int):
+    eb = pl.program_id(1)
+
+    @pl.when(eb == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    rb = pl.program_id(0)
+    seg = seg_ref[...]  # [BM] int32 (global segment ids, -1 = padding)
+    msg = msg_ref[...]  # [BM, D]
+    row_base = rb * block_rows
+    row_ids = row_base + jax.lax.iota(jnp.int32, block_rows)  # [BN]
+    onehot = (seg[:, None] == row_ids[None, :]).astype(msg.dtype)  # [BM, BN]
+    out_ref[...] += jax.lax.dot_general(
+        onehot,
+        msg,
+        dimension_numbers=(((0,), (0,)), ((), ())),  # onehot^T @ msg
+        preferred_element_type=out_ref.dtype,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_rows", "block_edges", "interpret")
+)
+def segment_spmm_pallas(
+    msg: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    block_rows: int = 128,
+    block_edges: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """out[s] = sum over e with seg[e] == s of msg[e].
+
+    msg: [M, D] (M padded to block_edges), seg: [M] int32 (-1 padding).
+    num_segments is padded up to block_rows internally; callers slice."""
+    m, d = msg.shape
+    assert seg.shape == (m,)
+    m_pad = -(-m // block_edges) * block_edges
+    n_pad = -(-num_segments // block_rows) * block_rows
+    if m_pad != m:
+        msg = jnp.pad(msg, ((0, m_pad - m), (0, 0)))
+        seg = jnp.pad(seg, (0, m_pad - m), constant_values=-1)
+    grid = (n_pad // block_rows, m_pad // block_edges)
+    out = pl.pallas_call(
+        functools.partial(_kernel, block_rows=block_rows),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((block_edges,), lambda rb, eb: (eb,)),
+            pl.BlockSpec((block_edges, d), lambda rb, eb: (eb, 0)),
+        ],
+        out_specs=pl.BlockSpec((block_rows, d), lambda rb, eb: (rb, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_pad, d), msg.dtype),
+        interpret=interpret,
+    )(seg.astype(jnp.int32), msg)
+    return out[:num_segments]

@@ -1,0 +1,32 @@
+"""Production meshes.  Target hardware: TPU v5e pods — 256 chips/pod as a
+(16, 16) ("data", "model") mesh; two pods add a leading "pod" axis that the
+shardings fold into data parallelism.
+
+Functions (never module-level constants) so importing this module never
+touches jax device state; the dry-run sets XLA_FLAGS before first jax use.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "make_local_mesh", "HW"]
+
+
+# TPU v5e hardware constants used by the roofline analysis
+HW = {
+    "peak_flops_bf16": 197e12,  # per chip
+    "hbm_bw": 819e9,  # bytes/s per chip
+    "ici_bw": 50e9,  # bytes/s per link
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(num_devices: int | None = None):
+    """Degenerate mesh over whatever devices exist (CPU smoke tests)."""
+    n = num_devices or len(jax.devices())
+    return jax.make_mesh((n, 1), ("data", "model"))

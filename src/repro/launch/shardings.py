@@ -1,0 +1,209 @@
+"""Sharding rules: map every param/optimizer/cache/batch leaf to a
+PartitionSpec on the ("data", "model") production mesh (multi-pod meshes
+fold the "pod" axis into data parallelism).
+
+Baseline policy (tensor parallel on "model"):
+  embed [V, d]               -> (model, None)          vocab-sharded table
+  attn wq / wk / wv [.., d, H*Dh] -> (.., None, model) head-sharded
+  attn wo [.., H*Dh, d]      -> (.., model, None)
+  MLA w_uk/w_uv [.., r, H*Dh]-> (.., None, model)
+  mlp w_gate/w_up [.., d, F] -> (.., None, model);  w_down -> (.., model, None)
+  moe experts [.., E, d, F]  -> expert-parallel (E over model) when E % model
+                                == 0 (DeepSeek 64/16), else tensor-parallel on
+                                F (Mixtral 8 experts, F=14336)
+  rglru channel params       -> channel dim over model (channels independent)
+  mamba2 (130M)              -> replicated (model too small to matter)
+  anything non-divisible     -> replicated (rule falls through)
+
+KV caches: batch over data; kv-head dim over model when divisible, else the
+*sequence* dim over model (MQA kv=1 — GSPMD turns decode attention into a
+partial-softmax + collective; see EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+__all__ = [
+    "data_axes",
+    "model_axis_size",
+    "batch_specs",
+    "param_specs",
+    "opt_state_specs",
+    "cache_specs",
+    "named",
+]
+
+
+def data_axes(mesh: Mesh):
+    return ("pod", "data") if "pod" in mesh.axis_names else "data"
+
+
+def model_axis_size(mesh: Mesh) -> int:
+    return mesh.shape["model"]
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def _div(n: int, m: int) -> bool:
+    return n % m == 0
+
+
+def _path_str(path) -> str:
+    out = []
+    for p in path:
+        if hasattr(p, "key"):
+            out.append(str(p.key))
+        elif hasattr(p, "idx"):
+            out.append(str(p.idx))
+    return "/".join(out)
+
+
+def _param_rule(path: str, shape: tuple, cfg, msize: int) -> P:
+    """shape includes the stacked leading layer axis inside stages."""
+    parts = path.split("/")
+    leaf = parts[-1]
+    stacked = parts[0] == "stages"
+    lead = (None,) if stacked else ()
+    nd = len(shape) - len(lead)
+
+    def spec(*dims):
+        return P(*(lead + dims))
+
+    if path == "embed":
+        return P("model", None) if _div(shape[0], msize) else P(None, None)
+    if path == "head":
+        return P(None, "model") if _div(shape[1], msize) else P(None, None)
+    if leaf in ("norm1", "norm2", "final_norm", "A_log", "D", "dt_bias", "norm_w", "lam"):
+        return P(*([None] * len(shape)))
+    # attention: kv projections shard only over WHOLE kv heads — a flat
+    # split that lands inside head_dim makes every attention einsum contract
+    # a sharded dim (per-block f32 score all-reduces; EXPERIMENTS.md §Perf)
+    if leaf in ("wk", "wv"):
+        hkv = getattr(cfg, "padded_kv_heads", 0)
+        return (
+            spec(None, "model")
+            if hkv and _div(hkv, msize)
+            else spec(None, None)
+        )
+    if leaf in ("wq", "w_uk", "w_uv"):
+        return spec(None, "model") if _div(shape[-1], msize) else spec(None, None)
+    if leaf == "wo":
+        return spec("model", None) if _div(shape[-2], msize) else spec(None, None)
+    if leaf in ("w_dkv", "w_krope"):
+        return spec(None, None)
+    # MoE experts [E, d, F] / [E, F, d]
+    if "mlp" in parts and leaf in ("w_gate", "w_up", "w_down") and nd == 3:
+        E = shape[-3]
+        if _div(E, msize):  # expert parallel
+            return spec("model", None, None)
+        # tensor parallel within experts
+        if leaf == "w_down":
+            return spec(None, "model", None) if _div(shape[-2], msize) else spec(None, None, None)
+        return spec(None, None, "model") if _div(shape[-1], msize) else spec(None, None, None)
+    if leaf == "router":
+        return spec(None, None)
+    # dense / shared-expert MLPs [d, F] / [F, d]
+    if leaf in ("w_gate", "w_up"):
+        return spec(None, "model") if _div(shape[-1], msize) else spec(None, None)
+    if leaf == "w_down":
+        return spec("model", None) if _div(shape[-2], msize) else spec(None, None)
+    # mamba2 / rglru projections
+    if leaf in ("in_proj", "w_ig", "w_rg"):
+        if cfg.family == "ssm":
+            return spec(*([None] * nd))  # 130M: replicate
+        return spec(None, "model") if _div(shape[-1], msize) else spec(None, None)
+    if leaf == "out_proj":
+        if cfg.family == "ssm":
+            return spec(*([None] * nd))
+        return spec("model", None) if _div(shape[-2], msize) else spec(None, None)
+    if leaf == "conv":
+        if cfg.family != "ssm" and _div(shape[-1], msize):
+            return spec(None, "model")
+        return spec(*([None] * nd))
+    return P(*([None] * len(shape)))
+
+
+def param_specs(cfg, params_shapes, mesh: Mesh) -> Any:
+    """params_shapes: pytree of ShapeDtypeStruct (from jax.eval_shape)."""
+    msize = model_axis_size(mesh)
+
+    def rule(path, leaf):
+        return _param_rule(_path_str(path), leaf.shape, cfg, msize)
+
+    return jax.tree_util.tree_map_with_path(rule, params_shapes)
+
+
+def opt_state_specs(pspecs):
+    """AdamW state mirrors params; step is replicated."""
+    return {
+        "mu": pspecs,
+        "nu": pspecs,
+        "step": P(),
+    }
+
+
+def batch_specs(cfg, batch: int, mesh: Mesh):
+    da = data_axes(mesh)
+    dsize = np.prod([mesh.shape[a] for a in (da if isinstance(da, tuple) else (da,))])
+    bspec = da if batch % dsize == 0 and batch >= dsize else None
+    if cfg.input_mode == "embeddings":
+        return {"inputs": P(bspec, None, None), "targets": P(bspec, None)}
+    return {"inputs": P(bspec, None), "targets": P(bspec, None)}
+
+
+def _cache_rule(path: str, shape: tuple, cfg, mesh: Mesh) -> P:
+    """Cache leaves carry a stacked layer axis at dim 0."""
+    da = data_axes(mesh)
+    msize = model_axis_size(mesh)
+    dsize = np.prod([mesh.shape[a] for a in (da if isinstance(da, tuple) else (da,))])
+    leaf = path.split("/")[-1]
+    if leaf == "pos":
+        return P(None)  # stacked scalar per layer
+    if leaf == "kpos":
+        return P(None, None)
+    batch = shape[1] if len(shape) > 1 else 1
+    b = da if batch % dsize == 0 and batch >= dsize else None
+    if leaf in ("k", "v"):  # [L_stage, B, S, Hkv, Dh]
+        if _div(shape[3], msize):
+            return P(None, b, None, "model", None)
+        if _div(shape[2], msize):
+            return P(None, b, "model", None, None)  # shard sequence (MQA)
+        return P(None, b, None, None, None)
+    if leaf in ("ckv", "krope"):  # [L_stage, B, S, r]
+        if _div(shape[2], msize):
+            return P(None, b, "model", None)
+        return P(None, b, None, None)
+    if leaf == "state":  # ssm [L,B,H,P,N] or rglru [L,B,d]
+        if len(shape) == 5:
+            return (
+                P(None, b, "model", None, None)
+                if _div(shape[2], msize)
+                else P(None, b, None, None, None)
+            )
+        return (
+            P(None, b, "model") if _div(shape[2], msize) else P(None, b, None)
+        )
+    if leaf == "conv":  # [L, B, W-1, C]
+        return (
+            P(None, b, None, "model")
+            if _div(shape[3], msize)
+            else P(None, b, None, None)
+        )
+    return P(*([None] * len(shape)))
+
+
+def cache_specs(cfg, cache_shapes, mesh: Mesh):
+    def rule(path, leaf):
+        return _cache_rule(_path_str(path), leaf.shape, cfg, mesh)
+
+    return jax.tree_util.tree_map_with_path(rule, cache_shapes)

@@ -1,0 +1,168 @@
+"""Assigned input shapes, ShapeDtypeStruct input specs, and the jit-able
+step functions (train / prefill / decode) shared by dryrun, train.py and
+serve.py."""
+from __future__ import annotations
+
+import dataclasses
+import math
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.model import forward, init_cache, init_params, lm_loss
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+__all__ = [
+    "SHAPES",
+    "resolve_config",
+    "input_specs",
+    "params_shapes",
+    "opt_shapes",
+    "cache_shapes",
+    "make_train_step",
+    "make_prefill_step",
+    "make_decode_step",
+]
+
+SHAPES = {
+    "train_4k": dict(seq=4096, batch=256, kind="train"),
+    "prefill_32k": dict(seq=32768, batch=32, kind="prefill"),
+    "decode_32k": dict(seq=32768, batch=128, kind="decode"),
+    "long_500k": dict(seq=524288, batch=1, kind="decode"),
+}
+
+
+def resolve_config(
+    cfg: ArchConfig, shape_name: str, model_axis: int = 0
+) -> ArchConfig | None:
+    """Apply the long-context strategy and (when a mesh model-axis size is
+    given) head padding for clean tensor-parallel tiling; None means the
+    combination is skipped (no arch skips here — every assigned arch has
+    native or windowed long decode; see DESIGN.md §4)."""
+    if shape_name == "long_500k":
+        if cfg.long_context == "window":
+            cfg = dataclasses.replace(cfg, window=cfg.long_context_window)
+        elif cfg.long_context != "native":
+            return None  # "skip"
+    if model_axis > 1:
+        # head padding pays off where full-sequence attention runs (the
+        # score-AR pathology); decode's grouped path has tiny scores, and
+        # padded kv would inflate the cache instead
+        pad_ok = SHAPES[shape_name]["kind"] in ("train", "prefill")
+        cfg = pad_heads_for_mesh(cfg, model_axis, enable_padding=pad_ok)
+    return cfg
+
+
+def pad_heads_for_mesh(
+    cfg: ArchConfig, msize: int, enable_padding: bool = True
+) -> ArchConfig:
+    """Resolve head padding + GQA mode for an msize-way tensor-parallel axis.
+
+    GSPMD only tiles whole tensor dims, so the attention einsums stay
+    collective-free iff either (group mode) the kv-head dim itself shards
+    msize ways, or (repeat mode) kv is replicated and padded q heads shard
+    as whole heads.  A flat split landing inside head_dim instead makes
+    every score einsum contract a sharded dim → per-block f32 all-reduces
+    (EXPERIMENTS.md §Perf).  Candidates, cheapest padded-head count wins:
+      (a) pad kv heads to msize           (group mode, kv sharded)
+      (b) pad GQA groups to msize         (group mode, kv replicated)
+      (c) pad q heads to lcm(msize, hkv)  (repeat mode, kv replicated)
+    Dead heads are sliced away before wo (like vocab padding)."""
+    if cfg.kv_lora_rank or not cfg.num_heads:
+        return dataclasses.replace(cfg, tp_size=msize)
+    h, hkv = cfg.num_heads, cfg.num_kv_heads
+    g = h // hkv
+    ru = lambda a, b: -(-a // b) * b
+    cands = []
+    # (a) kv heads shard fully
+    hkv_a = ru(hkv, msize)
+    cands.append((hkv_a * g, hkv_a))
+    # (b) groups shard fully, kv heads replicated
+    cands.append((hkv * ru(g, msize), hkv))
+    # (c) repeat mode: whole padded q heads shard; must stay multiple of hkv
+    l = math.lcm(msize, hkv)
+    cands.append((ru(h, l), hkv))
+    h_pad, hkv_pad = min(cands)
+    if h_pad == h and hkv_pad == hkv:
+        return dataclasses.replace(cfg, tp_size=msize)
+    if not enable_padding or h_pad > 1.5 * h:
+        # dead-head overhead exceeds the measured collective win (gemma
+        # train: pad 2.0x regressed the bound 2.77 -> 3.27s) — skip
+        return dataclasses.replace(cfg, tp_size=msize)
+    return dataclasses.replace(
+        cfg, q_head_pad=h_pad, kv_head_pad=hkv_pad, tp_size=msize
+    )
+
+
+def input_specs(cfg: ArchConfig, shape_name: str):
+    """ShapeDtypeStruct stand-ins for the model inputs of this shape (the
+    vlm/audio modality frontend stub: embeddings of the right shape)."""
+    sh = SHAPES[shape_name]
+    b, s, kind = sh["batch"], sh["seq"], sh["kind"]
+    tok = lambda bb, ss: jax.ShapeDtypeStruct((bb, ss), jnp.int32)
+    emb = lambda bb, ss: jax.ShapeDtypeStruct((bb, ss, cfg.d_model), jnp.bfloat16)
+    is_emb = cfg.input_mode == "embeddings"
+    if kind == "train":
+        return {
+            "inputs": emb(b, s) if is_emb else tok(b, s),
+            "targets": tok(b, s),
+        }
+    if kind == "prefill":
+        return {"inputs": emb(b, s) if is_emb else tok(b, s)}
+    # decode: one new token against a seq_len-deep cache
+    return {"inputs": emb(b, 1) if is_emb else tok(b, 1)}
+
+
+def params_shapes(cfg: ArchConfig):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def opt_shapes(cfg: ArchConfig):
+    return jax.eval_shape(adamw_init, params_shapes(cfg))
+
+
+def cache_shapes(cfg: ArchConfig, batch: int, max_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, max_len))
+
+
+def make_train_step(
+    cfg: ArchConfig,
+    opt_cfg: AdamWConfig | None = None,
+    remat: bool = True,
+    unroll: bool = False,
+):
+    opt_cfg = opt_cfg or AdamWConfig()
+
+    def train_step(params, opt_state, batch):
+        (loss, (nll, aux)), grads = jax.value_and_grad(
+            lambda p: lm_loss(
+                p, cfg, batch["inputs"], batch["targets"], remat=remat, unroll=unroll
+            ),
+            has_aux=True,
+        )(params)
+        params, opt_state, info = adamw_update(params, grads, opt_state, opt_cfg)
+        return params, opt_state, {"loss": loss, "nll": nll, "aux": aux, **info}
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, unroll: bool = False):
+    def prefill(params, cache, batch):
+        logits, _, cache = forward(
+            params, cfg, batch["inputs"], cache, 0, last_only=True, unroll=unroll
+        )
+        return logits[:, -1], cache
+
+    return prefill
+
+
+def make_decode_step(cfg: ArchConfig, unroll: bool = False):
+    def decode(params, cache, batch, pos):
+        logits, _, cache = forward(
+            params, cfg, batch["inputs"], cache, pos, unroll=unroll
+        )
+        return logits[:, -1], cache
+
+    return decode

@@ -1,0 +1,122 @@
+"""Training launcher.
+
+Two modes:
+  GNN (the paper's workload):
+    PYTHONPATH=src python -m repro.launch.train gnn --config sage-products \
+        --epochs 2
+  LM (assigned architecture pool, reduced configs on CPU):
+    PYTHONPATH=src python -m repro.launch.train lm --arch gemma-2b --reduced \
+        --steps 50 --batch 8 --seq 128
+
+On real TPU hardware the LM path shards over make_production_mesh(); on this
+CPU box it runs the reduced configs on the local degenerate mesh.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def run_gnn(args):
+    import jax
+
+    from repro.configs.gnn import get_gnn_config
+    from repro.core.partition import (
+        adadne,
+        distributed_ne,
+        hash2d_partition,
+        random_edge_partition,
+    )
+    from repro.core.sampling import GatherApplyClient, SamplingServer, VertexRouter
+    from repro.graph import build_partitions, named_dataset
+    from repro.models.gnn import GNNModel
+    from repro.train import GNNTrainer
+
+    cfg = get_gnn_config(args.config)
+    g = named_dataset(
+        cfg.dataset, feat_dim=cfg.feat_dim, num_classes=cfg.num_classes,
+        seed=args.seed, scale=args.scale,
+    )
+    print(f"dataset {cfg.dataset}: {g.num_vertices} vertices, {g.num_edges} edges")
+    part_fn = {
+        "adadne": adadne,
+        "dne": distributed_ne,
+        "hash2d": hash2d_partition,
+        "random": random_edge_partition,
+    }[cfg.partitioner]
+    ep = part_fn(g, cfg.num_parts, seed=args.seed)
+    parts = build_partitions(g, ep, cfg.num_parts)
+    client = GatherApplyClient(
+        [SamplingServer(p, seed=args.seed) for p in parts],
+        VertexRouter(g, ep, cfg.num_parts),
+        seed=args.seed,
+    )
+    model = GNNModel(
+        cfg.model,
+        cfg.feat_dim,
+        hidden=cfg.hidden,
+        num_layers=cfg.num_layers,
+        num_classes=cfg.num_classes,
+        num_heads=cfg.num_heads,
+    )
+    ids = np.arange(g.num_vertices)
+    rng = np.random.default_rng(args.seed)
+    rng.shuffle(ids)
+    n_train = int(0.8 * len(ids))
+    trainer = GNNTrainer(
+        model, client, g, list(cfg.fanouts), ids[:n_train],
+        batch_size=cfg.batch_size, direction=cfg.direction, seed=args.seed,
+    )
+    log = trainer.train(epochs=args.epochs, log_every=args.log_every)
+    acc = trainer.evaluate(ids[n_train:])
+    print(
+        f"final loss {log.losses[-1]:.4f} | test acc {acc:.4f} | "
+        f"sample {log.sample_time:.1f}s compute {log.compute_time:.1f}s"
+    )
+
+
+def run_lm(args):
+    from repro.configs import get_config
+    from repro.train import LMTrainer
+
+    cfg = get_config(args.arch, reduced=args.reduced)
+    if cfg.input_mode == "embeddings":
+        raise SystemExit(
+            f"{cfg.name} consumes precomputed embeddings; use examples/serve_decode.py"
+        )
+    tr = LMTrainer(cfg, batch=args.batch, seq_len=args.seq, seed=args.seed)
+    log = tr.train(args.steps, log_every=args.log_every)
+    print(f"nll: {log.losses[0]:.4f} -> {log.losses[-1]:.4f}")
+    if args.ckpt:
+        tr.save(args.ckpt, step=args.steps)
+        print("checkpoint saved to", args.ckpt)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    sub = ap.add_subparsers(dest="mode", required=True)
+    g = sub.add_parser("gnn")
+    g.add_argument("--config", default="sage-products")
+    g.add_argument("--epochs", type=int, default=1)
+    g.add_argument("--scale", type=float, default=0.25)
+    g.add_argument("--seed", type=int, default=0)
+    g.add_argument("--log-every", type=int, default=10)
+    lm = sub.add_parser("lm")
+    lm.add_argument("--arch", default="gemma-2b")
+    lm.add_argument("--reduced", action="store_true", default=True)
+    lm.add_argument("--steps", type=int, default=50)
+    lm.add_argument("--batch", type=int, default=8)
+    lm.add_argument("--seq", type=int, default=128)
+    lm.add_argument("--seed", type=int, default=0)
+    lm.add_argument("--log-every", type=int, default=10)
+    lm.add_argument("--ckpt", default="")
+    args = ap.parse_args()
+    if args.mode == "gnn":
+        run_gnn(args)
+    else:
+        run_lm(args)
+
+
+if __name__ == "__main__":
+    main()

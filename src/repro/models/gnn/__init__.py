@@ -1,0 +1,4 @@
+from repro.models.gnn.batching import GNNBatch, subgraph_to_batch
+from repro.models.gnn.models import GNNModel, GNN_KINDS
+
+__all__ = ["GNNBatch", "subgraph_to_batch", "GNNModel", "GNN_KINDS"]

@@ -1,0 +1,93 @@
+"""Host-side conversion: SampledSubgraph -> padded fixed-shape GNNBatch.
+
+XLA needs static shapes; sampled subgraphs are ragged.  We bucket-pad the
+vertex table and per-layer edge lists to multiples (power-of-two-ish) so jit
+recompiles only on bucket changes — this is the TPU adaptation of the
+paper's dynamic subgraph feeding (DESIGN.md §3).
+
+Layer-k edge list = concat of hops 0..K-1-k (a vertex first reached at depth
+d carries its sampled one-hop edges at hop d; see core/inference/engine.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+
+from repro.core.sampling.service import SampledSubgraph
+from repro.utils import round_up
+
+__all__ = ["GNNBatch", "subgraph_to_batch"]
+
+
+@jax.tree_util.register_dataclass
+@dataclass
+class GNNBatch:
+    feats: np.ndarray  # [V, F] float32, padded
+    valid: np.ndarray  # [V] bool
+    seed_pos: np.ndarray  # [B] int32 position of seeds in the table
+    labels: np.ndarray  # [B] int32
+    # per GNN layer k: (dst_pos [Ek], src_pos [Ek], etype [Ek]) padded, -1 pad
+    layer_dst: list
+    layer_src: list
+    layer_etype: list
+
+    @property
+    def num_vertices(self) -> int:
+        return self.feats.shape[0]
+
+
+def _bucket(n: int, quantum: int = 256) -> int:
+    return max(quantum, round_up(n, quantum))
+
+
+def subgraph_to_batch(
+    sub: SampledSubgraph,
+    feats: np.ndarray,
+    labels: np.ndarray | None,
+    num_layers: int,
+    edge_types_lookup=None,  # optional fn (src_gid, dst_gid) -> etype
+    vertex_quantum: int = 256,
+    edge_quantum: int = 1024,
+) -> GNNBatch:
+    verts = sub.all_vertices()  # unique sorted gids
+    vpad = _bucket(verts.shape[0], vertex_quantum)
+    table = np.zeros((vpad, feats.shape[1]), dtype=np.float32)
+    table[: verts.shape[0]] = feats[verts]
+    valid = np.zeros(vpad, dtype=bool)
+    valid[: verts.shape[0]] = True
+
+    seed_pos = np.searchsorted(verts, sub.seeds).astype(np.int32)
+    lab = (
+        labels[sub.seeds].astype(np.int32)
+        if labels is not None
+        else np.zeros(sub.seeds.shape[0], np.int32)
+    )
+
+    K = num_layers
+    layer_dst, layer_src, layer_et = [], [], []
+    for k in range(K):
+        hops = sub.hops[: K - k]
+        src = np.concatenate([h.src for h in hops]) if hops else np.zeros(0, np.int64)
+        dst = np.concatenate([h.dst for h in hops]) if hops else np.zeros(0, np.int64)
+        epad = _bucket(src.shape[0], edge_quantum)
+        d_pos = np.full(epad, -1, dtype=np.int32)
+        s_pos = np.full(epad, -1, dtype=np.int32)
+        et = np.zeros(epad, dtype=np.int32)
+        d_pos[: src.shape[0]] = np.searchsorted(verts, src)  # aggregation target
+        s_pos[: src.shape[0]] = np.searchsorted(verts, dst)  # message source
+        if edge_types_lookup is not None and src.shape[0]:
+            et[: src.shape[0]] = edge_types_lookup(src, dst)
+        layer_dst.append(d_pos)
+        layer_src.append(s_pos)
+        layer_et.append(et)
+    return GNNBatch(
+        feats=table,
+        valid=valid,
+        seed_pos=seed_pos,
+        labels=lab,
+        layer_dst=layer_dst,
+        layer_src=layer_src,
+        layer_etype=layer_et,
+    )

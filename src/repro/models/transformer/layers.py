@@ -1,0 +1,431 @@
+"""Transformer building blocks: norms, RoPE, attention (GQA/MQA, MLA,
+sliding-window, KV cache), gated MLPs.
+
+Attention dispatch:
+  * short sequences — dense masked attention (XLA fuses it fine);
+  * long sequences (> ``BLOCKWISE_THRESHOLD``) — blockwise online-softmax
+    attention in pure jnp via lax.scan over kv blocks (flash-style memory
+    footprint, required for the 32k prefill dry-runs);
+  * ``use_kernel=True`` — the Pallas flash kernel (real TPU; interpret mode
+    on CPU is for validation, not speed).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import ArchConfig
+
+BLOCKWISE_THRESHOLD = 4096
+_BLOCK = 1024
+
+Params = dict[str, Any]
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+
+
+def mm(x, w):
+    """Matmul with the weight cast to the activation dtype (bf16 compute with
+    fp32 master weights — without this every x(bf16)@W(f32) promotes the whole
+    activation stream to f32, doubling memory and HLO bytes)."""
+    return x @ w.astype(x.dtype)
+
+def dense_init(key, shape, scale: float | None = None):
+    scale = scale if scale is not None else (1.0 / shape[0]) ** 0.5
+    return (jax.random.normal(key, shape, dtype=jnp.float32) * scale).astype(
+        jnp.float32
+    )
+
+
+def rms_norm(x, w, eps: float = 1e-6):
+    """Variance via an f32-accumulating dot (no materialized f32 copy of x —
+    a full-tensor x.astype(f32) makes XLA hoist a whole-stack convert of the
+    remat-saved residuals out of the backward scan: 12 GiB at 24×16×4096×2048).
+    The full-tensor multiply stays in the activation dtype."""
+    var = (
+        jnp.einsum("...d,...d->...", x, x, preferred_element_type=jnp.float32)[
+            ..., None
+        ]
+        / x.shape[-1]
+    )
+    scale = jax.lax.rsqrt(var + eps).astype(x.dtype)
+    return x * scale * w.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(dim: int, theta: float):
+    return 1.0 / (theta ** (jnp.arange(0, dim, 2, dtype=jnp.float32) / dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: [B, S, H, D]; positions: [B, S] absolute positions."""
+    d = x.shape[-1]
+    freqs = rope_freqs(d, theta)  # [D/2]
+    angles = positions[..., None].astype(jnp.float32) * freqs  # [B, S, D/2]
+    cos = jnp.cos(angles)[:, :, None, :]
+    sin = jnp.sin(angles)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# attention cores
+# ---------------------------------------------------------------------------
+
+
+def _dense_attention(q, k, v, *, causal, window, q_offset):
+    """q: [B, Sq, H, D]; k, v: [B, Skv, Hkv, D] with Hkv | H — grouped-query
+    einsums keep the kv tensors in their native head count (no jnp.repeat:
+    a materialized repeat makes GSPMD all-gather the REPEATED kv, multiplying
+    collective bytes by H/Hkv)."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    q5 = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k).astype(jnp.float32) / (d**0.5)
+    q_pos = q_offset + jnp.arange(sq)[:, None]
+    k_pos = jnp.arange(skv)[None, :]
+    mask = jnp.ones((sq, skv), dtype=bool)
+    if causal:
+        mask &= k_pos <= q_pos
+    if window > 0:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v)
+    return o.reshape(b, sq, h, v.shape[-1])
+
+
+def _blockwise_attention(q, k, v, *, causal, window, q_offset):
+    """Flash-style online softmax, lax.scan over kv blocks (pure jnp).
+    kv stays in native head count (grouped-query einsums); k and v may have
+    different head dims (MLA: d_k = dh + rope, d_v = dh)."""
+    b, sq, h, d = q.shape
+    skv, hkv = k.shape[1], k.shape[2]
+    g = h // hkv
+    dv = v.shape[-1]
+    nb = -(-skv // _BLOCK)
+    pad = nb * _BLOCK - skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kb = k.reshape(b, nb, _BLOCK, hkv, d).transpose(1, 0, 2, 3, 4)
+    vb = v.reshape(b, nb, _BLOCK, hkv, dv).transpose(1, 0, 2, 3, 4)
+    qf = q.reshape(b, sq, hkv, g, d).astype(jnp.float32) / (d**0.5)
+    q_pos = q_offset + jnp.arange(sq)
+
+    def step(carry, inp):
+        o, m, l, blk = carry[0], carry[1], carry[2], carry[3]
+        kblk, vblk = inp
+        s = jnp.einsum("bqhgd,bkhd->bhgqk", qf, kblk.astype(jnp.float32))
+        k_pos = blk * _BLOCK + jnp.arange(_BLOCK)
+        mask = k_pos[None, :] < skv
+        if causal:
+            mask &= k_pos[None, :] <= q_pos[:, None]
+        if window > 0:
+            mask &= k_pos[None, :] > q_pos[:, None] - window
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        alpha = jnp.exp(m - m_new)
+        l_new = l * alpha + p.sum(axis=-1)
+        o_new = o * alpha[..., None] + jnp.einsum(
+            "bhgqk,bkhd->bhgqd", p, vblk.astype(jnp.float32)
+        )
+        return (o_new, m_new, l_new, blk + 1), None
+
+    o0 = jnp.zeros((b, hkv, g, sq, dv), jnp.float32)
+    m0 = jnp.full((b, hkv, g, sq), -1e30, jnp.float32)
+    l0 = jnp.zeros((b, hkv, g, sq), jnp.float32)
+    (o, m, l, _), _ = jax.lax.scan(step, (o0, m0, l0, jnp.int32(0)), (kb, vb))
+    o = o / jnp.maximum(l[..., None], 1e-30)
+    return o.transpose(0, 3, 1, 2, 4).reshape(b, sq, h, dv).astype(q.dtype)
+
+
+def attention_core(q, k, v, *, causal=True, window=0, q_offset=0, use_kernel=False):
+    """kv heads are repeated to match q heads before this call."""
+    if use_kernel:
+        from repro.kernels.ops import mha_attention
+
+        return mha_attention(
+            q, k, v, causal=causal, window=window, kv_offset=q_offset
+        )
+    if k.shape[1] > BLOCKWISE_THRESHOLD:
+        return _blockwise_attention(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+    return _dense_attention(q, k, v, causal=causal, window=window, q_offset=q_offset)
+
+
+def _repeat_kv(k, n_rep):
+    return jnp.repeat(k, n_rep, axis=2) if n_rep > 1 else k
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+
+def init_attention(key, cfg: ArchConfig) -> Params:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.padded_q_heads, cfg.padded_kv_heads
+    if cfg.kv_lora_rank:
+        return init_mla(key, cfg)
+    ks = jax.random.split(key, 4)
+    return {
+        "wq": dense_init(ks[0], (d, h * dh)),
+        "wk": dense_init(ks[1], (d, hkv * dh)),
+        "wv": dense_init(ks[2], (d, hkv * dh)),
+        "wo": dense_init(ks[3], (cfg.num_heads * dh, d)),  # real heads only
+    }
+
+
+def _decode_attention(q, k_all, v_all, kpos, pos, window):
+    """Dense attention with an explicit key-position mask — used in decode
+    where the cache may be a rolling window buffer (slot order ≠ position
+    order).  q: [B, 1, H, D]; k_all/v_all: [B, L, Hkv, D] (native kv heads);
+    kpos: [L] int32 absolute positions (-1 = empty slot)."""
+    b, sq, h, d = q.shape
+    hkv = k_all.shape[2]
+    g = h // hkv
+    q5 = q.reshape(b, sq, hkv, g, d)
+    s = jnp.einsum("bqhgd,bkhd->bhgqk", q5, k_all).astype(jnp.float32) / (d**0.5)
+    mask = (kpos >= 0) & (kpos <= pos)
+    if window > 0:
+        mask &= kpos > pos - window
+    s = jnp.where(mask[None, None, None, None, :], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1).astype(q.dtype)
+    o = jnp.einsum("bhgqk,bkhd->bqhgd", p, v_all)
+    return o.reshape(b, sq, h, v_all.shape[-1])
+
+
+def _cache_write(cache_tensor, new, pos, rolling_len):
+    """Write S new rows at rolling positions (pos..pos+S-1) mod L along axis 1.
+
+    S == 1 (decode): dynamic_update_slice at pos % L.
+    S >= L (prefill past a window cache): the last L tokens replace the whole
+        buffer, laid out by a roll so slot (p % L) holds position p.
+    1 < S < L (prefill into a fresh cache): contiguous write at pos
+        (convention: pos + S <= L — chunked prefill stays within capacity)."""
+    s = new.shape[1]
+    L = rolling_len
+    new = new.astype(cache_tensor.dtype)
+    if s == 1:
+        starts = (0, pos % L) + (0,) * (cache_tensor.ndim - 2)
+        return jax.lax.dynamic_update_slice(cache_tensor, new, starts)
+    if s >= L:
+        pstart = pos + s - L  # absolute position of the oldest surviving token
+        if s % L == 0:
+            # phase-aligned (every assigned prefill length is a multiple of
+            # the window): identity layout keeps the slot = pos % L invariant
+            # WITHOUT a roll — jnp.roll with a traced shift forces GSPMD to
+            # all-gather the sequence-sharded cache (EXPERIMENTS.md §Perf)
+            return new[:, -L:]
+        return jnp.roll(new[:, -L:], shift=pstart % L, axis=1)
+    starts = (0, pos) + (0,) * (cache_tensor.ndim - 2)
+    return jax.lax.dynamic_update_slice(cache_tensor, new, starts)
+
+
+def _kpos_write(kpos, pos, s, rolling_len):
+    L = rolling_len
+    if s == 1:
+        return jax.lax.dynamic_update_slice(
+            kpos, pos + jnp.arange(1, dtype=kpos.dtype), (pos % L,)
+        )
+    if s >= L:
+        pstart = pos + s - L
+        if s % L == 0:
+            return pstart + jnp.arange(L, dtype=kpos.dtype)
+        return jnp.roll(pstart + jnp.arange(L, dtype=kpos.dtype), pstart % L)
+    return jax.lax.dynamic_update_slice(
+        kpos, pos + jnp.arange(s, dtype=kpos.dtype), (pos,)
+    )
+
+
+def attention_forward(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [B, S, d]
+    *,
+    positions: jax.Array,  # [B, S] absolute positions of x tokens
+    cache: Params | None = None,  # {"k","v": [B,L,Hkv,Dh], "kpos": [L]}
+    window: int = 0,
+    use_kernel: bool = False,
+):
+    if cfg.kv_lora_rank:
+        return mla_forward(
+            p, cfg, x, positions=positions, cache=cache, window=window
+        )
+    b, s, d = x.shape
+    dh = cfg.resolved_head_dim
+    h, hkv = cfg.padded_q_heads, cfg.padded_kv_heads
+    q = (mm(x, p["wq"])).reshape(b, s, h, dh)
+    k = (mm(x, p["wk"])).reshape(b, s, hkv, dh)
+    v = (mm(x, p["wv"])).reshape(b, s, hkv, dh)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+
+    # GQA mode for full-sequence attention: when neither the kv-head dim nor
+    # the group dim tiles the model axis, kv is replicated by the sharding
+    # rules and a LOCAL repeat (free on replicated tensors) gives whole-head
+    # q sharding with zero attention collectives.  Decode keeps the grouped
+    # einsum (cache may be sequence-sharded; scores are tiny).
+    tp = cfg.tp_size
+    repeat_mode = bool(
+        tp and hkv % tp and (h // hkv) % tp and h % tp == 0 and h != hkv
+    )
+
+    def maybe_repeat(kk, vv):
+        if repeat_mode:
+            return _repeat_kv(kk, h // hkv), _repeat_kv(vv, h // hkv)
+        return kk, vv
+
+    def project_out(o):
+        """Slice away padded (dead) heads, keeping the real GQA grouping:
+        padded layout is (hkv_pad, g_pad, dh); real heads live at
+        (kv < hkv_real, g < g_real)."""
+        h_real, hkv_real = cfg.num_heads, cfg.num_kv_heads
+        if h != h_real or hkv != hkv_real:
+            g_pad, g_real = h // hkv, h_real // hkv_real
+            o5 = o.reshape(b, s, hkv, g_pad, dh)
+            o = o5[:, :, :hkv_real, :g_real].reshape(b, s, h_real, dh)
+        return (mm(o.reshape(b, s, h_real * dh), p["wo"])).astype(x.dtype)
+
+    if cache is None:  # training: full-sequence causal (+ optional SWA)
+        kr, vr = maybe_repeat(k, v)
+        o = attention_core(
+            q, kr, vr, causal=True, window=window, use_kernel=use_kernel
+        )
+        return project_out(o), None
+
+    L = cache["k"].shape[1]
+    pos = cache["pos"]
+    ck = _cache_write(cache["k"], k, pos, L)
+    cv = _cache_write(cache["v"], v, pos, L)
+    kpos = _kpos_write(cache["kpos"], pos, s, L)
+    new_cache = {"k": ck, "v": cv, "kpos": kpos, "pos": pos + s}
+    if s > 1:
+        # prefill (pos==0 by convention, contiguous cache): attend over the
+        # fresh k/v directly — blockwise for long sequences
+        kr, vr = maybe_repeat(k, v)
+        o = attention_core(
+            q, kr, vr, causal=True, window=window, use_kernel=use_kernel
+        )
+    else:
+        o = _decode_attention(q, ck, cv, kpos, pos, window)
+    return project_out(o), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 multi-head latent attention)
+# ---------------------------------------------------------------------------
+
+
+def init_mla(key, cfg: ArchConfig) -> Params:
+    d, dh = cfg.d_model, cfg.resolved_head_dim
+    h, r, rd = cfg.num_heads, cfg.kv_lora_rank, cfg.rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq": dense_init(ks[0], (d, h * (dh + rd))),
+        "w_dkv": dense_init(ks[1], (d, r)),
+        "w_krope": dense_init(ks[2], (d, rd)),
+        "w_uk": dense_init(ks[3], (r, h * dh)),
+        "w_uv": dense_init(ks[4], (r, h * dh)),
+        "wo": dense_init(ks[5], (h * dh, d)),
+    }
+
+
+def mla_forward(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,
+    *,
+    positions: jax.Array,
+    cache: Params | None = None,  # {"ckv": [B,L,r], "krope": [B,L,rd], "kpos"}
+    window: int = 0,
+):
+    b, s, d = x.shape
+    h, dh = cfg.num_heads, cfg.resolved_head_dim
+    r, rd = cfg.kv_lora_rank, cfg.rope_head_dim
+    q = (mm(x, p["wq"])).reshape(b, s, h, dh + rd)
+    q_nope, q_rope = q[..., :dh], q[..., dh:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    qh = jnp.concatenate([q_nope, q_rope], axis=-1)
+
+    ckv = mm(x, p["w_dkv"])  # [B, S, r]  — this (plus krope) is ALL that's cached
+    krope = apply_rope(
+        (mm(x, p["w_krope"]))[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0]  # [B, S, rd]
+
+    def expand_kv(ckv_all, krope_all):
+        skv = ckv_all.shape[1]
+        k_nope = (mm(ckv_all, p["w_uk"])).reshape(b, skv, h, dh)
+        v = (mm(ckv_all, p["w_uv"])).reshape(b, skv, h, dh)
+        k = jnp.concatenate(
+            [
+                k_nope,
+                jnp.broadcast_to(
+                    krope_all[:, :, None, :], (b, skv, h, rd)
+                ).astype(k_nope.dtype),
+            ],
+            axis=-1,
+        )
+        return k, v
+
+    if cache is None:
+        k, v = expand_kv(ckv, krope)
+        o = attention_core(qh, k, v, causal=True, window=window)
+        return (mm(o.reshape(b, s, h * dh), p["wo"])).astype(x.dtype), None
+
+    L = cache["ckv"].shape[1]
+    pos = cache["pos"]
+    c_ckv = _cache_write(cache["ckv"], ckv, pos, L)
+    c_kr = _cache_write(cache["krope"], krope, pos, L)
+    kpos = _kpos_write(cache["kpos"], pos, s, L)
+    new_cache = {"ckv": c_ckv, "krope": c_kr, "kpos": kpos, "pos": pos + s}
+    if s > 1:  # prefill: attend over fresh kv
+        k, v = expand_kv(ckv, krope)
+        o = attention_core(qh, k, v, causal=True, window=window)
+    else:
+        k, v = expand_kv(c_ckv, c_kr)
+        o = _decode_attention(qh, k, v, kpos, pos, window)
+    return (mm(o.reshape(b, s, h * dh), p["wo"])).astype(x.dtype), new_cache
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+
+def init_mlp(key, d: int, d_ff: int, activation: str = "swiglu") -> Params:
+    ks = jax.random.split(key, 3)
+    if activation == "gelu":  # plain 2-proj MLP (gpt-style)
+        return {
+            "w_up": dense_init(ks[1], (d, d_ff)),
+            "w_down": dense_init(ks[2], (d_ff, d)),
+        }
+    return {
+        "w_gate": dense_init(ks[0], (d, d_ff)),
+        "w_up": dense_init(ks[1], (d, d_ff)),
+        "w_down": dense_init(ks[2], (d_ff, d)),
+    }
+
+
+def mlp_forward(p: Params, x: jax.Array, activation: str = "swiglu") -> jax.Array:
+    if activation == "gelu":
+        return (mm(jax.nn.gelu(mm(x, p["w_up"])), p["w_down"])).astype(x.dtype)
+    gate = mm(x, p["w_gate"])
+    act = jax.nn.silu(gate) if activation == "swiglu" else jax.nn.gelu(gate)
+    return (mm(act * mm(x, p["w_up"]), p["w_down"])).astype(x.dtype)

@@ -1,0 +1,346 @@
+"""Decoder backbone assembly: embedding → scanned layer stages → norm → head.
+
+Layers repeat in ``cfg.pattern`` periods; consecutive periods share a
+``lax.scan`` over stacked parameters (one period of HLO per stage regardless
+of depth — essential for 52/60-layer dry-run compile times).  A trailing
+partial period becomes its own stage.
+
+Three entry points share one forward:
+    ``forward(params, cfg, inputs)``                      — training
+    ``forward(params, cfg, inputs, cache, pos)``          — prefill (S>1)
+    ``forward(params, cfg, inputs, cache, pos)``          — decode (S=1)
+
+``inputs`` is int32 tokens [B, S] for LM archs or precomputed embeddings
+[B, S, d] for the vlm/audio stubs (cfg.input_mode == "embeddings").
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.layers import (
+    Params,
+    attention_forward,
+    dense_init,
+    init_attention,
+    init_mlp,
+    mlp_forward,
+    rms_norm,
+)
+from repro.models.transformer.moe import init_moe, moe_forward
+from repro.models.transformer.ssm import (
+    init_mamba2,
+    init_rglru,
+    mamba2_forward,
+    rglru_forward,
+)
+
+__all__ = [
+    "stage_plan",
+    "init_params",
+    "init_cache",
+    "forward",
+    "lm_loss",
+    "param_count",
+]
+
+
+# ---------------------------------------------------------------------------
+# plan & init
+# ---------------------------------------------------------------------------
+
+
+def stage_plan(cfg: ArchConfig) -> list[tuple[tuple[str, ...], int]]:
+    period = len(cfg.pattern)
+    reps, rem = divmod(cfg.num_layers, period)
+    stages: list[tuple[tuple[str, ...], int]] = []
+    if reps:
+        stages.append((tuple(cfg.pattern), reps))
+    if rem:
+        stages.append((tuple(cfg.pattern[:rem]), 1))
+    return stages
+
+
+def _has_mlp(cfg: ArchConfig, kind: str) -> bool:
+    return kind != "ssm"  # mamba blocks carry their own gating, no MLP
+
+
+def _init_layer(key, cfg: ArchConfig, kind: str) -> Params:
+    kmix, kmlp = jax.random.split(key)
+    p: Params = {"norm1": jnp.ones((cfg.d_model,), jnp.float32)}
+    if kind in ("attn", "local_attn"):
+        p["mixer"] = init_attention(kmix, cfg)
+    elif kind == "ssm":
+        p["mixer"] = init_mamba2(kmix, cfg)
+    elif kind == "rglru":
+        p["mixer"] = init_rglru(kmix, cfg)
+    else:
+        raise ValueError(kind)
+    if _has_mlp(cfg, kind):
+        p["norm2"] = jnp.ones((cfg.d_model,), jnp.float32)
+        p["mlp"] = init_moe(kmlp, cfg) if cfg.moe is not None else init_mlp(
+            kmlp, cfg.d_model, cfg.d_ff, cfg.activation
+        )
+    return p
+
+
+def init_params(cfg: ArchConfig, key) -> Params:
+    keys = jax.random.split(key, len(stage_plan(cfg)) + 2)
+    params: Params = {
+        "embed": dense_init(keys[0], (cfg.padded_vocab_size, cfg.d_model), scale=0.02),
+        "final_norm": jnp.ones((cfg.d_model,), jnp.float32),
+        "stages": [],
+    }
+    if not cfg.tie_embeddings:
+        params["head"] = dense_init(keys[1], (cfg.d_model, cfg.padded_vocab_size))
+    for si, (kinds, reps) in enumerate(stage_plan(cfg)):
+        skey = keys[si + 2]
+        stacked = []
+        for ki, kind in enumerate(kinds):
+            lkeys = jax.random.split(jax.random.fold_in(skey, ki), reps)
+            layers = [_init_layer(lk, cfg, kind) for lk in lkeys]
+            stacked.append(jax.tree.map(lambda *xs: jnp.stack(xs), *layers))
+        params["stages"].append(stacked)
+    return params
+
+
+def param_count(params: Params) -> int:
+    return sum(x.size for x in jax.tree.leaves(params))
+
+
+# ---------------------------------------------------------------------------
+# cache
+# ---------------------------------------------------------------------------
+
+
+def _init_layer_cache(cfg: ArchConfig, kind: str, batch: int, max_len: int):
+    dtype = jnp.dtype(cfg.dtype)
+    if kind in ("attn", "local_attn"):
+        if cfg.kv_lora_rank:
+            return {
+                "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+                "krope": jnp.zeros((batch, max_len, cfg.rope_head_dim), dtype),
+                "kpos": jnp.full((max_len,), -1, jnp.int32),
+                "pos": jnp.int32(0),
+            }
+        dh = cfg.resolved_head_dim
+        return {
+            "k": jnp.zeros((batch, max_len, cfg.padded_kv_heads, dh), dtype),
+            "v": jnp.zeros((batch, max_len, cfg.padded_kv_heads, dh), dtype),
+            "kpos": jnp.full((max_len,), -1, jnp.int32),
+            "pos": jnp.int32(0),
+        }
+    if kind == "ssm":
+        s = cfg.ssm
+        d_in = s.expand * cfg.d_model
+        nh = s.num_heads or d_in // s.head_dim
+        return {
+            "state": jnp.zeros((batch, nh, s.head_dim, s.state_dim), jnp.float32),
+            "conv": jnp.zeros(
+                (batch, s.conv_width - 1, d_in + 2 * s.num_groups * s.state_dim),
+                dtype,
+            ),
+            "pos": jnp.int32(0),
+        }
+    if kind == "rglru":
+        return {
+            "state": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            "conv": jnp.zeros((batch, 3, cfg.d_model), dtype),
+            "pos": jnp.int32(0),
+        }
+    raise ValueError(kind)
+
+
+def cache_len_for(cfg: ArchConfig, kind: str, seq_len: int) -> int:
+    """Cache capacity per attention kind: local windows cap it; the
+    long-context window variant caps full attention too."""
+    if kind == "local_attn":
+        return min(seq_len, cfg.local_window)
+    if kind == "attn":
+        if cfg.window > 0:
+            return min(seq_len, cfg.window)
+        return seq_len
+    return 1  # ssm/rglru keep O(1) state; length unused
+
+
+def init_cache(cfg: ArchConfig, batch: int, max_len: int):
+    caches = []
+    for kinds, reps in stage_plan(cfg):
+        stage_caches = []
+        for kind in kinds:
+            one = _init_layer_cache(cfg, kind, batch, cache_len_for(cfg, kind, max_len))
+            stage_caches.append(
+                jax.tree.map(lambda x: jnp.stack([x] * reps), one)
+                if reps > 1
+                else jax.tree.map(lambda x: x[None], one)
+            )
+        caches.append(stage_caches)
+    return caches
+
+
+# ---------------------------------------------------------------------------
+# forward
+# ---------------------------------------------------------------------------
+
+
+def _layer_forward(
+    lp: Params,
+    cfg: ArchConfig,
+    kind: str,
+    x: jax.Array,
+    positions: jax.Array,
+    cache: Params | None,
+    use_kernel: bool = False,
+):
+    aux = jnp.float32(0.0)
+    h = rms_norm(x, lp["norm1"], cfg.norm_eps)
+    if kind in ("attn", "local_attn"):
+        window = cfg.local_window if kind == "local_attn" else cfg.window
+        y, new_cache = attention_forward(
+            lp["mixer"],
+            cfg,
+            h,
+            positions=positions,
+            cache=cache,
+            window=window,
+            use_kernel=use_kernel,
+        )
+    elif kind == "ssm":
+        y, new_cache = mamba2_forward(lp["mixer"], cfg, h, cache=cache)
+    elif kind == "rglru":
+        y, new_cache = rglru_forward(lp["mixer"], cfg, h, cache=cache)
+    else:
+        raise ValueError(kind)
+    x = (x + y).astype(x.dtype)
+    if _has_mlp(cfg, kind):
+        h = rms_norm(x, lp["norm2"], cfg.norm_eps)
+        if cfg.moe is not None:
+            y, aux = moe_forward(lp["mlp"], cfg, h, cfg.activation)
+        else:
+            y = mlp_forward(lp["mlp"], h, cfg.activation)
+        x = (x + y).astype(x.dtype)
+    return x, new_cache, aux
+
+
+def _stage_forward(
+    sp: list,
+    cfg: ArchConfig,
+    kinds: tuple[str, ...],
+    x: jax.Array,
+    positions: jax.Array,
+    caches: list | None,
+    remat: bool,
+    use_kernel: bool,
+    unroll: bool = False,
+):
+    reps = jax.tree.leaves(sp[0])[0].shape[0]
+
+    def body(carry, xs):
+        h, aux = carry
+        layer_params, layer_caches = xs
+        new_caches = []
+        for ki, kind in enumerate(kinds):
+            lc = None if layer_caches is None else layer_caches[ki]
+            h, nc, a = _layer_forward(
+                layer_params[ki], cfg, kind, h, positions, lc, use_kernel
+            )
+            new_caches.append(nc)
+        return (h, aux + a), (new_caches if caches is not None else 0)
+
+    fn = jax.checkpoint(body) if remat else body
+    if reps == 1:
+        # avoid scan overhead for singleton stages
+        lp = [jax.tree.map(lambda t: t[0], p) for p in sp]
+        lc = (
+            None
+            if caches is None
+            else [jax.tree.map(lambda t: t[0], c) for c in caches]
+        )
+        (x, aux), ys = fn((x, jnp.float32(0.0)), (lp, lc))
+        new_caches = (
+            None
+            if caches is None
+            else [jax.tree.map(lambda t: t[None], c) for c in ys]
+        )
+        return x, aux, new_caches
+    xs = (sp, caches if caches is not None else None)
+    (x, aux), ys = jax.lax.scan(
+        fn, (x, jnp.float32(0.0)), xs, unroll=reps if unroll else 1
+    )
+    new_caches = ys if caches is not None else None
+    return x, aux, new_caches
+
+
+def forward(
+    params: Params,
+    cfg: ArchConfig,
+    inputs: jax.Array,
+    cache: list | None = None,
+    pos: jax.Array | int = 0,
+    *,
+    remat: bool = False,
+    use_kernel: bool = False,
+    last_only: bool = False,
+    unroll: bool = False,
+):
+    """Returns (logits [B, S, V] (or [B, 1, V] if last_only), aux, new_cache)."""
+    dtype = jnp.dtype(cfg.dtype)
+    if cfg.input_mode == "tokens":
+        x = params["embed"][inputs].astype(dtype)
+    else:
+        x = inputs.astype(dtype)
+    b, s = x.shape[0], x.shape[1]
+    positions = (jnp.asarray(pos) + jnp.arange(s))[None, :].astype(jnp.int32)
+    positions = jnp.broadcast_to(positions, (b, s))
+
+    aux_total = jnp.float32(0.0)
+    new_caches = [] if cache is not None else None
+    for si, (kinds, reps) in enumerate(stage_plan(cfg)):
+        st_cache = None if cache is None else cache[si]
+        x, aux, nc = _stage_forward(
+            params["stages"][si],
+            cfg,
+            kinds,
+            x,
+            positions,
+            st_cache,
+            remat,
+            use_kernel,
+            unroll,
+        )
+        aux_total += aux
+        if new_caches is not None:
+            new_caches.append(nc)
+    if last_only:
+        x = x[:, -1:]
+    x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+    head = (
+        params["embed"].T if cfg.tie_embeddings else params["head"]
+    )
+    logits = (x @ head.astype(dtype)).astype(jnp.float32)
+    if cfg.padded_vocab_size != cfg.vocab_size:  # mask padded vocab rows
+        logits = jnp.where(
+            jnp.arange(cfg.padded_vocab_size) < cfg.vocab_size, logits, -1e30
+        )
+    return logits, aux_total, new_caches
+
+
+def lm_loss(
+    params: Params,
+    cfg: ArchConfig,
+    inputs: jax.Array,
+    targets: jax.Array,
+    *,
+    remat: bool = True,
+    z_loss: float = 1e-4,
+    unroll: bool = False,
+):
+    logits, aux, _ = forward(params, cfg, inputs, remat=remat, unroll=unroll)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    tgt_logit = jnp.take_along_axis(logits, targets[..., None], axis=-1)[..., 0]
+    nll = (logz - tgt_logit).mean()
+    return nll + aux + z_loss * jnp.square(logz).mean(), (nll, aux)

@@ -1,0 +1,139 @@
+"""Mixture-of-Experts with top-k routing and capacity-based dispatch.
+
+This is GLISP's hotspot-load-balancing idea on-device (DESIGN.md §4): the
+router's auxiliary loss plays the role AdaDNE's soft balance constraint plays
+for graph partitions — work (tokens) must spread evenly over servers
+(experts).  Dispatch is GShard/Switch-style with a capacity factor: per
+expert at most C = ceil(T·k/E · cf) tokens; overflow tokens fall through on
+the residual path.
+
+Sharding intent (configs pick one):
+  expert-parallel — experts sharded over the "model" mesh axis (DeepSeek:
+      64 routed experts / 16 = 4 per device), dispatch becomes all-to-all;
+  tensor-parallel — expert FFN hidden dim sharded over "model" (Mixtral:
+      8 experts can't split 16 ways, but d_ff 14336/16 = 896 can).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import ArchConfig, MoEConfig
+from repro.models.transformer.layers import Params, dense_init
+
+__all__ = ["init_moe", "moe_forward"]
+
+
+def init_moe(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    e: MoEConfig = cfg.moe
+    dff = e.expert_d_ff or cfg.d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (d, e.num_experts), scale=0.02),
+        "w_gate": dense_init(ks[1], (e.num_experts, d, dff)),
+        "w_up": dense_init(ks[2], (e.num_experts, d, dff)),
+        "w_down": dense_init(ks[3], (e.num_experts, dff, d)),
+    }
+    if e.num_shared:
+        sks = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "w_gate": dense_init(sks[0], (d, e.num_shared * dff)),
+            "w_up": dense_init(sks[1], (d, e.num_shared * dff)),
+            "w_down": dense_init(sks[2], (e.num_shared * dff, d)),
+        }
+    return p
+
+
+def moe_forward(
+    p: Params, cfg: ArchConfig, x: jax.Array, activation: str = "swiglu"
+) -> tuple[jax.Array, jax.Array]:
+    """x: [B, S, d] -> (y, aux_loss).
+
+    Dispatch runs in ``cfg.moe_dispatch_groups`` independent token groups
+    (the launcher sets it to the data-parallel shard count): routing,
+    capacity and the dispatch buffers all carry a leading group axis that
+    GSPMD shards with the batch — without it the [E, C_global, d] dispatch
+    buffer is REPLICATED per device and all-reduced every layer (the 10 TB/
+    step pathology of the baseline; EXPERIMENTS.md §Perf)."""
+    e: MoEConfig = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    G = max(1, getattr(cfg, "moe_dispatch_groups", 1))
+    if t % G:
+        G = 1
+    tg = t // G
+    xt = x.reshape(G, tg, d)
+    act = jax.nn.silu if activation == "swiglu" else jax.nn.gelu
+
+    logits = jnp.einsum(
+        "gtd,de->gte", xt, p["router"].astype(xt.dtype)
+    ).astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)  # [G, Tg, E]
+    gate_vals, gate_idx = jax.lax.top_k(probs, e.top_k)  # [G, Tg, k]
+    gate_vals = gate_vals / jnp.maximum(
+        gate_vals.sum(axis=-1, keepdims=True), 1e-9
+    )
+
+    # ---- load-balance auxiliary loss (Switch-style, per group) ------------
+    me = probs.mean(axis=1)  # [G, E]
+    ce = jax.nn.one_hot(gate_idx[..., 0], e.num_experts).mean(axis=1)
+    aux = (me * ce).sum(-1).mean() * e.num_experts * e.aux_loss_weight
+
+    # ---- capacity dispatch (within each group) -----------------------------
+    cap = max(1, int(tg * e.top_k / e.num_experts * e.capacity_factor))
+    flat_idx = gate_idx.reshape(G, tg * e.top_k)  # expert of each slot
+    slot_onehot = jax.nn.one_hot(flat_idx, e.num_experts, dtype=jnp.int32)
+    pos = (jnp.cumsum(slot_onehot, axis=1) * slot_onehot - 1).max(-1)  # [G, Tk]
+    keep = pos < cap
+    tok_of_slot = jnp.repeat(jnp.arange(tg), e.top_k)  # same for every group
+    gate_of_slot = gate_vals.reshape(G, tg * e.top_k)
+    gidx = jnp.arange(G)[:, None]
+
+    def shard_g(t, expert_dim: bool = False):
+        """Pin the group axis to the data mesh axes — the scatter-built
+        dispatch buffer otherwise stays REPLICATED under GSPMD.  For
+        expert-parallel archs (E % tp == 0, e.g. DeepSeek 64/16) the expert
+        dim is co-sharded over "model" so the dispatch einsum is the
+        all-to-all, not a resharding fight against the constraint."""
+        if G > 1 and cfg.data_axis_names:
+            from jax.sharding import PartitionSpec as _P
+
+            ep = (
+                expert_dim
+                and cfg.tp_size
+                and e.num_experts % cfg.tp_size == 0
+            )
+            dims = ["model" if (ep and i == 1) else None for i in range(1, t.ndim)]
+            spec = _P(cfg.data_axis_names, *dims)
+            return jax.lax.with_sharding_constraint(t, spec)
+        return t
+
+    xe = jnp.zeros((G, e.num_experts, cap, d), dtype=x.dtype)
+    xe = xe.at[gidx, flat_idx, jnp.clip(pos, 0, cap - 1)].add(
+        jnp.where(keep[..., None], xt[:, tok_of_slot], 0).astype(x.dtype)
+    )
+    xe = shard_g(xe, expert_dim=True)
+    # expert FFN (batched einsum over groups × experts)
+    h = jnp.einsum("gecd,edf->gecf", xe, p["w_gate"].astype(xe.dtype))
+    u = jnp.einsum("gecd,edf->gecf", xe, p["w_up"].astype(xe.dtype))
+    ye = jnp.einsum(
+        "gecf,efd->gecd", act(h) * u, p["w_down"].astype(xe.dtype)
+    )  # [G, E, C, d]
+    # combine back to tokens
+    y_slots = ye[gidx, flat_idx, jnp.clip(pos, 0, cap - 1)]  # [G, Tk, d]
+    y_slots = jnp.where(keep[..., None], y_slots, 0) * gate_of_slot[
+        ..., None
+    ].astype(x.dtype)
+    yt = jax.vmap(
+        lambda ys: jax.ops.segment_sum(ys, tok_of_slot, num_segments=tg)
+    )(y_slots)
+    yt = shard_g(yt)  # reduce at token granularity, not dispatch-slot
+
+    if e.num_shared:
+        sp = p["shared"]
+        yt = yt + (
+            act(xt @ sp["w_gate"].astype(xt.dtype))
+            * (xt @ sp["w_up"].astype(xt.dtype))
+        ) @ sp["w_down"].astype(xt.dtype)
+    return yt.reshape(b, s, d).astype(x.dtype), aux

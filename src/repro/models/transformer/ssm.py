@@ -1,0 +1,253 @@
+"""State-space & linear-recurrence mixers: Mamba-2 (SSD) and RG-LRU (Griffin/
+RecurrentGemma).
+
+Both expose (train/prefill) full-sequence forward plus an O(1)-state decode
+step — these are the natively sub-quadratic paths used by long_500k.
+
+The SSD train path is the chunked block decomposition (pure-jnp mirror of
+kernels/ssd_scan.py, lax.scan over chunks with MXU-friendly intra-chunk
+matmuls).  RG-LRU uses an associative scan (log-depth on TPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.transformer.config import ArchConfig, SSMConfig
+from repro.models.transformer.layers import Params, dense_init, mm
+
+__all__ = [
+    "init_mamba2",
+    "mamba2_forward",
+    "init_rglru",
+    "rglru_forward",
+    "ssd_chunked_jnp",
+]
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD (jnp mirror of the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+
+def ssd_chunked_jnp(x, a, dt, B, C, *, chunk: int = 128, init_state=None):
+    """x: [Bz, S, H, P]; a, dt: [Bz, S, H]; B, C: [Bz, S, G, N] in GROUP form
+    (G divides H) — the head expansion happens per chunk inside the scan step
+    so no [Bz, S, H, N] materialization.  Returns (y, final_state[Bz,H,P,N])."""
+    bz, S, H, P = x.shape
+    G, N = B.shape[-2], B.shape[-1]
+    reps = H // G
+    pad = (-S) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        a = jnp.pad(a, ((0, 0), (0, pad), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    nc = (S + pad) // chunk
+    # reshape to chunks, move chunk axis first for scan
+    def to_chunks(t):
+        return t.reshape((bz, nc, chunk) + t.shape[2:]).swapaxes(0, 1)
+
+    xc, ac, dtc, Bc, Cc = map(to_chunks, (x, a, dt, B, C))
+
+    def step(state, inp):
+        xk, ak, dk, bk, ck = inp  # [Bz, L, H, ...]; bk/ck [Bz, L, G, N]
+        bk = jnp.repeat(bk, reps, axis=2)  # -> [Bz, L, H, N] (chunk-local)
+        ck = jnp.repeat(ck, reps, axis=2)
+        ak = ak.astype(jnp.float32)
+        csum = jnp.cumsum(ak, axis=1)  # [Bz, L, H]
+        cb = jnp.einsum("blhn,bmhn->bhlm", ck.astype(jnp.float32), bk.astype(jnp.float32))
+        seg = csum[:, :, None] - csum[:, None, :]  # [Bz, L, L, H]
+        ii = jnp.arange(xk.shape[1])
+        causal = ii[:, None] >= ii[None, :]
+        decay = jnp.where(causal[None, :, :, None], jnp.exp(jnp.where(causal[None, :, :, None], seg, 0.0)), 0.0)
+        m = cb * decay.transpose(0, 3, 1, 2) * dk.astype(jnp.float32).transpose(0, 2, 1)[:, :, None, :]
+        y = jnp.einsum("bhlm,bmhp->blhp", m, xk.astype(jnp.float32))
+        # inter-chunk
+        y += jnp.exp(csum)[..., None] * jnp.einsum(
+            "blhn,bhpn->blhp", ck.astype(jnp.float32), state
+        )
+        # state update
+        w = jnp.exp(csum[:, -1:, :] - csum) * dk.astype(jnp.float32)  # [Bz, L, H]
+        state = jnp.exp(csum[:, -1])[:, :, None, None] * state + jnp.einsum(
+            "blhp,blhn->bhpn", xk.astype(jnp.float32) * w[..., None], bk.astype(jnp.float32)
+        )
+        return state, y
+
+    if init_state is None:
+        init_state = jnp.zeros((bz, H, P, N), jnp.float32)
+    state, yc = jax.lax.scan(step, init_state, (xc, ac, dtc, Bc, Cc))
+    y = yc.swapaxes(0, 1).reshape(bz, S + pad, H, P)[:, :S]
+    return y.astype(x.dtype), state
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * d
+    nh = s.num_heads or d_in // s.head_dim
+    g, n = s.num_groups, s.state_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d_in + 2 * g * n + nh)),
+        "conv": dense_init(ks[1], (s.conv_width, d_in + 2 * g * n), scale=0.2),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_w": jnp.ones((d_in,), jnp.float32),
+        "out_proj": dense_init(ks[2], (d_in, d)),
+    }
+
+
+def _causal_conv(x, w, state=None):
+    """Depthwise causal conv1d.  x: [B, S, C]; w: [W, C].
+    state: [B, W-1, C] trailing context (decode).  Returns (y, new_state)."""
+    width = w.shape[0]
+    if state is None:
+        xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    else:
+        xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)
+    y = sum(xp[:, i : i + x.shape[1]] * w[i] for i in range(width))
+    new_state = xp[:, -(width - 1) :] if width > 1 else None
+    return y.astype(x.dtype), new_state
+
+
+def mamba2_forward(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [B, S, d]
+    *,
+    cache: Params | None = None,  # {"state": [B,H,P,N], "conv": [B,W-1,C]}
+):
+    s: SSMConfig = cfg.ssm
+    b, S, d = x.shape
+    d_in = s.expand * d
+    nh = s.num_heads or d_in // s.head_dim
+    g, n, ph = s.num_groups, s.state_dim, s.head_dim
+
+    zxbcdt = mm(x, p["in_proj"])
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * g * n], axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(jax.nn.silu(xbc), p["conv"], conv_state)
+    xin, B_, C_ = jnp.split(xbc, [d_in, d_in + g * n], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B,S,nh]
+    A = -jnp.exp(p["A_log"])  # [nh]
+    a = dt * A  # [B,S,nh] <= 0
+
+    xh = xin.reshape(b, S, nh, ph)
+    Bg = B_.reshape(b, S, g, n)
+    Cg = C_.reshape(b, S, g, n)
+
+    init_state = cache["state"] if cache is not None else None
+    if S == 1 and cache is not None:
+        # decode: one recurrence step, no chunking
+        Bh = jnp.repeat(Bg[:, 0], nh // g, axis=1)  # [B, nh, n]
+        Ch = jnp.repeat(Cg[:, 0], nh // g, axis=1)
+        st = init_state
+        dec = jnp.exp(a[:, 0]).astype(jnp.float32)  # [B, nh]
+        st = st * dec[..., None, None] + jnp.einsum(
+            "bhp,bhn,bh->bhpn",
+            xh[:, 0].astype(jnp.float32),
+            Bh.astype(jnp.float32),
+            dt[:, 0],
+        )
+        y = jnp.einsum("bhpn,bhn->bhp", st, Ch.astype(jnp.float32))[:, None]
+        state = st
+    else:
+        y, state = ssd_chunked_jnp(xh, a, dt, Bg, Cg, chunk=s.chunk, init_state=init_state)
+    y = y + p["D"][None, None, :, None] * xh.astype(jnp.float32)
+    y = y.reshape(b, S, d_in).astype(x.dtype)
+    # gated RMSNorm then out
+    yz = y * jax.nn.silu(z)
+    var = (
+        jnp.einsum("...d,...d->...", yz, yz, preferred_element_type=jnp.float32)[
+            ..., None
+        ]
+        / yz.shape[-1]
+    )
+    yz = yz * jax.lax.rsqrt(var + 1e-6).astype(yz.dtype) * p["norm_w"].astype(yz.dtype)
+    out = mm(yz, p["out_proj"]).astype(x.dtype)
+    new_cache = (
+        {"state": state, "conv": new_conv, "pos": cache["pos"] + S}
+        if cache is not None
+        else None
+    )
+    return out, new_cache
+
+
+# ---------------------------------------------------------------------------
+# RG-LRU block (RecurrentGemma / Griffin recurrent block)
+# ---------------------------------------------------------------------------
+
+_RGLRU_C = 8.0
+
+
+def init_rglru(key, cfg: ArchConfig) -> Params:
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * d)),  # u branch + gate branch
+        "conv": dense_init(ks[1], (4, d), scale=0.2),
+        "w_ig": dense_init(ks[2], (d, d)),  # input gate
+        "w_rg": dense_init(ks[3], (d, d)),  # recurrence gate
+        "lam": jnp.full((d,), 2.2, jnp.float32),  # softplus^-1-ish init
+        "out_proj": dense_init(ks[4], (d, d)),
+    }
+
+
+def rglru_forward(
+    p: Params,
+    cfg: ArchConfig,
+    x: jax.Array,  # [B, S, d]
+    *,
+    cache: Params | None = None,  # {"state": [B,d], "conv": [B,3,d]}
+):
+    b, S, d = x.shape
+    ug = mm(x, p["in_proj"])
+    u, gate = jnp.split(ug, 2, axis=-1)
+    conv_state = cache["conv"] if cache is not None else None
+    u, new_conv = _causal_conv(u, p["conv"], conv_state)
+
+    i_g = jax.nn.sigmoid(mm(u, p["w_ig"])).astype(jnp.float32)
+    r_g = jax.nn.sigmoid(mm(u, p["w_rg"])).astype(jnp.float32)
+    log_a = -_RGLRU_C * jax.nn.softplus(p["lam"]) * r_g  # [B,S,d] <= 0
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - jnp.exp(2.0 * log_a), 1e-9, 1.0))
+    bterm = beta * (i_g * u.astype(jnp.float32))
+
+    if S == 1 and cache is not None:
+        h = a[:, 0] * cache["state"] + bterm[:, 0]
+        hs = h[:, None]
+        state = h
+    else:
+        init = (
+            cache["state"]
+            if cache is not None
+            else jnp.zeros((b, d), jnp.float32)
+        )
+        # first-order linear recurrence via associative scan (log-depth)
+        # h_t = a_t * h_{t-1} + b_t ; fold the init into b_1
+        b0 = bterm.at[:, 0].add(a[:, 0] * init)
+
+        def op(l, r):
+            al, bl = l
+            ar, br = r
+            return al * ar, ar * bl + br
+
+        a_sc, h_sc = jax.lax.associative_scan(op, (a, b0), axis=1)
+        hs = h_sc
+        state = h_sc[:, -1]
+    y = hs.astype(x.dtype) * jax.nn.gelu(gate)
+    out = mm(y, p["out_proj"]).astype(x.dtype)
+    new_cache = (
+        {"state": state, "conv": new_conv, "pos": cache["pos"] + S}
+        if cache is not None
+        else None
+    )
+    return out, new_cache

@@ -1,0 +1,14 @@
+from repro.train.optim import adamw_init, adamw_update, sgd_update, clip_by_global_norm
+from repro.train.checkpoint import save_checkpoint, load_checkpoint
+from repro.train.loop import GNNTrainer, LMTrainer
+
+__all__ = [
+    "adamw_init",
+    "adamw_update",
+    "sgd_update",
+    "clip_by_global_norm",
+    "save_checkpoint",
+    "load_checkpoint",
+    "GNNTrainer",
+    "LMTrainer",
+]

@@ -1,0 +1,56 @@
+"""Checkpointing: pytree <-> single .npz with slash-joined path keys.
+
+Works for params, optimizer state, and nested lists/dicts (stage lists in the
+transformer params).  Lists are encoded as dict keys "<i>" and restored by
+the reference-tree structure on load.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = ["save_checkpoint", "load_checkpoint"]
+
+
+def _flatten(tree, prefix=""):
+    if isinstance(tree, dict):
+        for k, v in tree.items():
+            yield from _flatten(v, f"{prefix}{k}/")
+    elif isinstance(tree, (list, tuple)):
+        for i, v in enumerate(tree):
+            yield from _flatten(v, f"{prefix}{i}/")
+    elif tree is None:
+        return
+    else:
+        yield prefix[:-1], np.asarray(tree)
+
+
+def save_checkpoint(path: str, tree, step: int | None = None) -> None:
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    flat = dict(_flatten(tree))
+    if step is not None:
+        flat["__step__"] = np.asarray(step)
+    np.savez(path, **flat)
+
+
+def load_checkpoint(path: str, like):
+    """Restore into the structure of ``like`` (a template pytree)."""
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    step = int(flat.pop("__step__")) if "__step__" in flat else None
+
+    def rebuild(template, prefix=""):
+        if isinstance(template, dict):
+            return {k: rebuild(v, f"{prefix}{k}/") for k, v in template.items()}
+        if isinstance(template, (list, tuple)):
+            t = [rebuild(v, f"{prefix}{i}/") for i, v in enumerate(template)]
+            return type(template)(t) if isinstance(template, tuple) else t
+        if template is None:
+            return None
+        arr = flat[prefix[:-1]]
+        return jnp.asarray(arr, dtype=template.dtype if hasattr(template, "dtype") else None)
+
+    return rebuild(like), step

@@ -1,0 +1,158 @@
+"""Training loops.
+
+``GNNTrainer`` — the paper's end-to-end pipeline: GLISP sampling service on
+the host feeds padded minibatches into a jit'd AdamW step (the Fig. 11
+workload).  ``LMTrainer`` — causal-LM training for the assigned architecture
+pool (synthetic token stream), used by smoke tests and the quickstart.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.data.graph_loader import SeedBatchLoader
+from repro.data.tokens import SyntheticTokenStream
+from repro.models.gnn.batching import subgraph_to_batch
+from repro.models.gnn.models import GNNModel
+from repro.models.transformer.config import ArchConfig
+from repro.models.transformer.model import forward, init_params, lm_loss
+from repro.train.checkpoint import save_checkpoint
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["GNNTrainer", "LMTrainer"]
+
+
+@dataclass
+class TrainLog:
+    steps: list = field(default_factory=list)
+    losses: list = field(default_factory=list)
+    accs: list = field(default_factory=list)
+    wall: list = field(default_factory=list)
+    sample_time: float = 0.0
+    compute_time: float = 0.0
+
+
+class GNNTrainer:
+    def __init__(
+        self,
+        model: GNNModel,
+        client,  # GatherApplyClient or EdgeCutClient
+        g,
+        fanouts,
+        train_ids: np.ndarray,
+        batch_size: int = 256,
+        opt: AdamWConfig | None = None,
+        direction: str = "out",
+        seed: int = 0,
+    ):
+        self.model = model
+        self.client = client
+        self.g = g
+        self.fanouts = fanouts
+        self.loader = SeedBatchLoader(train_ids, batch_size, seed)
+        self.opt_cfg = opt or AdamWConfig(lr=1e-3, weight_decay=1e-4)
+        self.direction = direction
+        self.params = model.init(jax.random.PRNGKey(seed))
+        self.opt_state = adamw_init(self.params)
+        self.log = TrainLog()
+
+        def step(params, opt_state, batch):
+            loss, grads = jax.value_and_grad(model.loss)(params, batch)
+            params, opt_state, info = adamw_update(
+                params, grads, opt_state, self.opt_cfg
+            )
+            return params, opt_state, loss
+
+        self._step = jax.jit(step)
+
+        def acc_fn(params, batch):
+            logits = model.apply(params, batch)
+            return (jnp.argmax(logits, -1) == batch.labels).mean()
+
+        self._acc = jax.jit(acc_fn)
+
+    def make_batch(self, seeds):
+        sub = self.client.sample_khop(seeds, self.fanouts, direction=self.direction)
+        return subgraph_to_batch(
+            sub, self.g.vertex_feats, self.g.labels, self.model.num_layers
+        )
+
+    def train(self, epochs: int = 1, log_every: int = 10):
+        step = 0
+        for _ in range(epochs):
+            for seeds in self.loader.epoch():
+                t0 = time.perf_counter()
+                batch = self.make_batch(seeds)
+                t1 = time.perf_counter()
+                batch_j = jax.tree.map(jnp.asarray, batch)
+                self.params, self.opt_state, loss = self._step(
+                    self.params, self.opt_state, batch_j
+                )
+                loss = float(loss)
+                t2 = time.perf_counter()
+                self.log.sample_time += t1 - t0
+                self.log.compute_time += t2 - t1
+                if step % log_every == 0:
+                    self.log.steps.append(step)
+                    self.log.losses.append(loss)
+                step += 1
+        return self.log
+
+    def evaluate(self, test_ids: np.ndarray, batches: int = 8) -> float:
+        loader = SeedBatchLoader(test_ids, self.loader.batch, seed=123)
+        accs = []
+        for i, seeds in enumerate(loader.epoch()):
+            if i >= batches:
+                break
+            batch = jax.tree.map(jnp.asarray, self.make_batch(seeds))
+            accs.append(float(self._acc(self.params, batch)))
+        return float(np.mean(accs)) if accs else 0.0
+
+
+class LMTrainer:
+    def __init__(
+        self,
+        cfg: ArchConfig,
+        batch: int,
+        seq_len: int,
+        opt: AdamWConfig | None = None,
+        seed: int = 0,
+        remat: bool = True,
+    ):
+        self.cfg = cfg
+        self.stream = SyntheticTokenStream(cfg.vocab_size, batch, seq_len, seed)
+        self.opt_cfg = opt or AdamWConfig(lr=3e-4)
+        self.params = init_params(cfg, jax.random.PRNGKey(seed))
+        self.opt_state = adamw_init(self.params)
+        self.log = TrainLog()
+
+        def step(params, opt_state, inputs, targets):
+            (loss, (nll, aux)), grads = jax.value_and_grad(
+                lambda p: lm_loss(p, cfg, inputs, targets, remat=remat),
+                has_aux=True,
+            )(params)
+            params, opt_state, info = adamw_update(params, grads, opt_state, self.opt_cfg)
+            return params, opt_state, loss, nll
+
+        self._step = jax.jit(step)
+
+    def train(self, steps: int, log_every: int = 10):
+        for s in range(steps):
+            inp, tgt = self.stream.next_batch()
+            t0 = time.perf_counter()
+            self.params, self.opt_state, loss, nll = self._step(
+                self.params, self.opt_state, jnp.asarray(inp), jnp.asarray(tgt)
+            )
+            nll = float(nll)
+            self.log.compute_time += time.perf_counter() - t0
+            if s % log_every == 0 or s == steps - 1:
+                self.log.steps.append(s)
+                self.log.losses.append(nll)
+        return self.log
+
+    def save(self, path: str, step: int = 0):
+        save_checkpoint(path, {"params": self.params, "opt": self.opt_state}, step)

@@ -1,0 +1,117 @@
+"""Small shared utilities: timing, rng, byte accounting, padding helpers."""
+from __future__ import annotations
+
+import json
+import time
+from contextlib import contextmanager
+from dataclasses import dataclass, field
+
+import numpy as np
+
+__all__ = [
+    "Timer",
+    "timed",
+    "human_bytes",
+    "nbytes_of",
+    "pad_to",
+    "ceil_div",
+    "round_up",
+    "stable_hash64",
+    "json_dump",
+]
+
+
+@dataclass
+class Timer:
+    """Accumulating wall-clock timer keyed by section name."""
+
+    totals: dict = field(default_factory=dict)
+    counts: dict = field(default_factory=dict)
+
+    @contextmanager
+    def section(self, name: str):
+        t0 = time.perf_counter()
+        try:
+            yield
+        finally:
+            dt = time.perf_counter() - t0
+            self.totals[name] = self.totals.get(name, 0.0) + dt
+            self.counts[name] = self.counts.get(name, 0) + 1
+
+    def summary(self) -> dict:
+        return {
+            k: {"total_s": self.totals[k], "calls": self.counts[k]}
+            for k in sorted(self.totals)
+        }
+
+
+@contextmanager
+def timed(out: dict, key: str):
+    t0 = time.perf_counter()
+    try:
+        yield
+    finally:
+        out[key] = out.get(key, 0.0) + time.perf_counter() - t0
+
+
+def human_bytes(n: float) -> str:
+    for unit in ("B", "KiB", "MiB", "GiB", "TiB"):
+        if abs(n) < 1024.0:
+            return f"{n:.2f} {unit}"
+        n /= 1024.0
+    return f"{n:.2f} PiB"
+
+
+def nbytes_of(obj) -> int:
+    """Total nbytes of a (nested) structure of numpy arrays."""
+    if isinstance(obj, np.ndarray):
+        return obj.nbytes
+    if isinstance(obj, dict):
+        return sum(nbytes_of(v) for v in obj.values())
+    if isinstance(obj, (list, tuple)):
+        return sum(nbytes_of(v) for v in obj)
+    if hasattr(obj, "__dict__"):
+        return sum(nbytes_of(v) for v in vars(obj).values())
+    return 0
+
+
+def ceil_div(a: int, b: int) -> int:
+    return -(-a // b)
+
+
+def round_up(a: int, b: int) -> int:
+    return ceil_div(a, b) * b
+
+
+def pad_to(arr: np.ndarray, n: int, fill=0) -> np.ndarray:
+    """Pad axis-0 of ``arr`` to length ``n`` with ``fill`` (truncates if longer)."""
+    if arr.shape[0] >= n:
+        return arr[:n]
+    pad_shape = (n - arr.shape[0],) + arr.shape[1:]
+    return np.concatenate([arr, np.full(pad_shape, fill, dtype=arr.dtype)], axis=0)
+
+
+def stable_hash64(x: np.ndarray, salt: int = 0) -> np.ndarray:
+    """Deterministic 64-bit mix hash (splitmix64 finalizer), vectorized."""
+    with np.errstate(over="ignore"):
+        z = x.astype(np.uint64) + np.uint64(0x9E3779B97F4A7C15) * np.uint64(
+            salt + 1
+        )
+    z = (z ^ (z >> np.uint64(30))) * np.uint64(0xBF58476D1CE4E5B9)
+    z = (z ^ (z >> np.uint64(27))) * np.uint64(0x94D049BB133111EB)
+    return z ^ (z >> np.uint64(31))
+
+
+def json_dump(obj, path: str) -> None:
+    class _Enc(json.JSONEncoder):
+        def default(self, o):
+            if isinstance(o, (np.integer,)):
+                return int(o)
+            if isinstance(o, (np.floating,)):
+                return float(o)
+            if isinstance(o, np.ndarray):
+                return o.tolist()
+            return super().default(o)
+
+    with open(path, "w") as f:
+        json.dump(obj, f, indent=2, cls=_Enc)

@@ -1,0 +1,63 @@
+"""Per-assigned-architecture smoke tests (requirement f): REDUCED variant of
+each family — one forward + one train step (or decode for embedding archs)
+on CPU, asserting output shapes and no NaNs."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config
+from repro.models.transformer.model import forward, init_cache, init_params, lm_loss
+from repro.train.optim import AdamWConfig, adamw_init, adamw_update
+
+B, S = 2, 32
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_reduced_forward_and_step(arch):
+    cfg = get_config(arch, reduced=True)
+    assert cfg.num_layers <= 3 and cfg.d_model <= 512
+    if cfg.moe is not None:
+        assert cfg.moe.num_experts <= 4
+    key = jax.random.PRNGKey(0)
+    params = init_params(cfg, key)
+    if cfg.input_mode == "embeddings":
+        inp = jax.random.normal(key, (B, S, cfg.d_model))
+    else:
+        inp = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    tgt = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+
+    logits, aux, _ = forward(params, cfg, inp)
+    assert logits.shape == (B, S, cfg.padded_vocab_size)
+    assert bool(jnp.isfinite(logits[..., : cfg.vocab_size]).all()), "NaN/inf in logits"
+
+    # one AdamW train step
+    opt = adamw_init(params)
+    (loss, _), grads = jax.value_and_grad(
+        lambda p: lm_loss(p, cfg, inp, tgt), has_aux=True
+    )(params)
+    assert np.isfinite(float(loss))
+    new_params, opt, info = adamw_update(params, grads, opt, AdamWConfig(lr=1e-3))
+    assert np.isfinite(float(info["grad_norm"]))
+    # params actually changed
+    delta = sum(
+        float(jnp.abs(a - b).sum())
+        for a, b in zip(jax.tree.leaves(new_params), jax.tree.leaves(params))
+    )
+    assert delta > 0
+
+
+@pytest.mark.parametrize("arch", ["gemma-2b", "mamba2-130m", "recurrentgemma-2b",
+                                  "mixtral-8x7b", "deepseek-v2-lite-16b"])
+def test_reduced_decode_step(arch):
+    cfg = get_config(arch, reduced=True)
+    key = jax.random.PRNGKey(1)
+    params = init_params(cfg, key)
+    cache = init_cache(cfg, B, 64)
+    if cfg.input_mode == "embeddings":
+        tok = jax.random.normal(key, (B, 1, cfg.d_model))
+    else:
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+    logits, _, cache = forward(params, cfg, tok, cache, 0)
+    assert logits.shape == (B, 1, cfg.padded_vocab_size)
+    assert bool(jnp.isfinite(logits[..., : cfg.vocab_size]).all())
