@@ -1,28 +1,25 @@
-"""Shared benchmark helpers: dataset prep, partition cache, CSV emission."""
-from __future__ import annotations
+"""Shared benchmark helpers: dataset prep, system cache, CSV emission.
 
-import sys
-import time
+All pipelines are constructed through the unified facade —
+``GLISPSystem.build(g, GLISPConfig(...))`` — never by hand-wiring servers
+and routers.  ``glisp_client`` / ``edgecut_client`` return the underlying
+simulation clients for benchmarks that poke workload counters directly.
+"""
+from __future__ import annotations
 
 import numpy as np
 
-from repro.core.partition import (
-    adadne,
-    distributed_ne,
-    edge_cut_to_edge_assignment,
-    hash2d_partition,
-    ldg_edge_cut,
-    random_edge_partition,
-)
-from repro.core.sampling import (
-    EdgeCutClient,
-    GatherApplyClient,
-    SamplingServer,
-    VertexRouter,
-)
-from repro.graph import build_partitions, named_dataset
+from repro.api import GLISPConfig, GLISPSystem
 
 _CACHE: dict = {}
+
+# display name (CSV rows) -> registry name
+PARTITIONERS = {
+    "AdaDNE": "adadne",
+    "DistributedNE": "dne",
+    "Hash2D": "hash2d",
+    "Random": "random",
+}
 
 
 def emit(name: str, value: float, derived: str = "") -> None:
@@ -30,6 +27,8 @@ def emit(name: str, value: float, derived: str = "") -> None:
 
 
 def dataset(name: str, scale: float = 0.25, feat_dim: int = 32, num_classes: int = 8):
+    from repro.graph import named_dataset
+
     key = ("ds", name, scale, feat_dim, num_classes)
     if key not in _CACHE:
         _CACHE[key] = named_dataset(
@@ -38,44 +37,71 @@ def dataset(name: str, scale: float = 0.25, feat_dim: int = 32, num_classes: int
     return _CACHE[key]
 
 
-PARTITIONERS = {
-    "AdaDNE": adadne,
-    "DistributedNE": distributed_ne,
-    "Hash2D": hash2d_partition,
-    "Random": random_edge_partition,
-}
+def glisp_system(
+    g, parts: int, alg: str = "AdaDNE", seed: int = 0, **overrides
+) -> GLISPSystem:
+    key = ("sys", id(g), alg, parts, seed, tuple(sorted(overrides.items())))
+    if key not in _CACHE:
+        _CACHE[key] = GLISPSystem.build(
+            g,
+            GLISPConfig(
+                num_parts=parts,
+                partitioner=PARTITIONERS.get(alg, alg),
+                sampler="gather_apply",
+                seed=seed,
+                **overrides,
+            ),
+        )
+    return _CACHE[key]
+
+
+def edgecut_system(
+    g, parts: int, seed: int = 0, direction: str | None = None, **overrides
+) -> GLISPSystem:
+    """DistDGL-style baseline system; ``direction`` picks which one-hop the
+    owner answers locally (edges follow that endpoint's owner).  Defaults to
+    the stack-wide ``DEFAULT_DIRECTION`` so GLISP-vs-baseline comparisons
+    sample the SAME neighborhoods; pass ``direction="in"`` for the strict
+    DistDGL in-edges-local layout."""
+    if direction is None:
+        from repro.api import DEFAULT_DIRECTION
+
+        direction = DEFAULT_DIRECTION
+    key = ("ecsys", id(g), parts, seed, direction, tuple(sorted(overrides.items())))
+    if key not in _CACHE:
+        _CACHE[key] = GLISPSystem.build(
+            g,
+            GLISPConfig(
+                num_parts=parts,
+                partitioner="ldg",
+                sampler="edge_cut",
+                direction=direction,
+                seed=seed,
+                **overrides,
+            ),
+        )
+    return _CACHE[key]
 
 
 def partition(g, alg: str, parts: int, seed: int = 0):
+    """(edge_assignment, seconds) for one partitioner via the registry —
+    times the algorithm alone, no servers/routers built."""
+    from repro.api import PARTITIONERS as REGISTRY
+
     key = ("part", id(g), alg, parts, seed)
     if key not in _CACHE:
+        import time
+
+        fn = REGISTRY.get(PARTITIONERS.get(alg, alg))
         t0 = time.perf_counter()
-        ep = PARTITIONERS[alg](g, parts, seed=seed)
-        _CACHE[key] = (ep, time.perf_counter() - t0)
+        plan = fn(g, parts, seed=seed)
+        _CACHE[key] = (plan.edge_parts, time.perf_counter() - t0)
     return _CACHE[key]
 
 
 def glisp_client(g, parts: int, alg: str = "AdaDNE", seed: int = 0):
-    key = ("client", id(g), alg, parts, seed)
-    if key not in _CACHE:
-        ep, _ = partition(g, alg, parts, seed)
-        built = build_partitions(g, ep, parts)
-        _CACHE[key] = GatherApplyClient(
-            [SamplingServer(p, seed=seed) for p in built],
-            VertexRouter(g, ep, parts),
-            seed=seed,
-        )
-    return _CACHE[key]
+    return glisp_system(g, parts, alg, seed).client
 
 
-def edgecut_client(g, parts: int, seed: int = 0):
-    key = ("ecclient", id(g), parts, seed)
-    if key not in _CACHE:
-        vp = ldg_edge_cut(g, parts, seed=seed)
-        built = build_partitions(g, edge_cut_to_edge_assignment(g, vp), parts)
-        _CACHE[key] = EdgeCutClient(
-            [SamplingServer(p, seed=seed, cost_model="scan") for p in built],
-            vp.astype(np.int64),
-            seed=seed,
-        )
-    return _CACHE[key]
+def edgecut_client(g, parts: int, seed: int = 0, direction: str | None = None):
+    return edgecut_system(g, parts, seed, direction).client

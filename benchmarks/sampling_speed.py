@@ -36,7 +36,8 @@ def run():
     for ds, parts in CASES:
         g = dataset(ds)
         gl = glisp_client(g, parts)
-        ec = edgecut_client(g, parts)
+        # strict DistDGL layout (in-edges local), sampled with "in" below
+        ec = edgecut_client(g, parts, direction="in")
         for weighted in (False, True):
             kind = "weighted" if weighted else "uniform"
             n_g, w_g, pw_g, tw_g = _run(gl, g.num_vertices, weighted, "out")

@@ -15,7 +15,8 @@ def run():
     for ds, parts in CASES:
         g = dataset(ds)
         gl = glisp_client(g, parts)
-        ec = edgecut_client(g, parts)
+        # strict DistDGL layout (in-edges local), sampled with "in" below
+        ec = edgecut_client(g, parts, direction="in")
         seeds = rng.choice(g.num_vertices, 1024, replace=False)
         for name, client, direction in (("GLISP", gl, "out"), ("DistDGL", ec, "in")):
             client.reset_stats()

@@ -1,12 +1,29 @@
 """Paper Table IV + Fig. 11: test accuracy and end-to-end training speed of
-GCN/GraphSAGE/GAT on the GLISP pipeline vs the edge-cut pipeline."""
+GCN/GraphSAGE/GAT on the GLISP pipeline vs the edge-cut pipeline, plus the
+prefetching batch pipeline vs the serial sample-then-step path.
+
+All systems are assembled via ``GLISPSystem.build`` (benchmarks/common.py).
+
+The prefetch comparison emulates the accelerator deployment on a CPU-only
+box with an explicit host/device core split: the training process (XLA) is
+pinned to core 0 in BOTH modes, and the prefetch sampling worker gets core 1
+— on real hardware the device computes off-CPU so this split is free, while
+here XLA would otherwise saturate every core and leave the sampler nothing
+to overlap into.  The split must be installed before XLA spins up its
+thread pool, hence a fresh subprocess.
+"""
 from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
 
 import numpy as np
 
-from benchmarks.common import dataset, edgecut_client, emit, glisp_client
+from benchmarks.common import dataset, edgecut_system, emit, glisp_system
+from repro.api import GLISPConfig, GLISPSystem
 from repro.models.gnn import GNNModel
-from repro.train import GNNTrainer
 from repro.train.optim import AdamWConfig
 
 
@@ -22,29 +39,24 @@ def _prep(g, classes=3):
     return g
 
 
-def run():
-    # power-law dataset with community structure (GCN/GAT need homophily)
-    g = _prep(dataset("ogbn-paper", scale=0.12))
-    ids = np.arange(g.num_vertices)
-    rng = np.random.default_rng(0)
-    rng.shuffle(ids)
-    n_train = int(0.7 * len(ids))
+def _opt(steps=200):
+    return AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=steps)
+
+
+def run_system_comparison(g, ids, n_train):
     for model_kind in ("gcn", "sage", "gat"):
         res = {}
-        for sys_name, client, direction in (
-            ("GLISP", glisp_client(g, 2), "out"),
-            ("EdgeCut", edgecut_client(g, 2), "in"),
+        for sys_name, system in (
+            ("GLISP", glisp_system(g, 2, fanouts=(15, 10, 5))),
+            ("EdgeCut", edgecut_system(g, 2, fanouts=(15, 10, 5))),
         ):
             model = GNNModel(model_kind, g.vertex_feats.shape[1], hidden=64,
                              num_layers=3, num_classes=3)
-            tr = GNNTrainer(
-                model, client, g, [15, 10, 5], ids[:n_train], batch_size=256,
-                direction=direction,
-                opt=AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=200),
-            )
-            client.parallel_work = client.total_work = 0.0
+            tr = system.trainer(model, ids[:n_train], opt=_opt(), prefetch=0)
+            system.reset_stats()
             log = tr.train(epochs=1, log_every=10)
             acc = tr.evaluate(ids[n_train:], batches=4)
+            client = system.client
             res[sys_name] = (log, client.parallel_work, client.total_work, acc)
             emit(f"table4/{model_kind}/{sys_name}/test_acc", acc)
         # e2e speedup model: common compute time, shared serial cost per work
@@ -61,5 +73,92 @@ def run():
         emit(f"fig11/{model_kind}/sampling_speedup", pe / max(pg, 1e-9))
 
 
+def _pin_host_device_split():
+    """Pin this (XLA) process to core 0, reserving core 1 for the sampling
+    worker.  Returns the worker's core set, or None when the box has a
+    single core (no split possible — overlap then has nothing to run on)."""
+    if not hasattr(os, "sched_setaffinity"):
+        return None
+    cores = sorted(os.sched_getaffinity(0))
+    if len(cores) < 2:
+        return None
+    os.sched_setaffinity(0, {cores[0]})
+    return (cores[1],)
+
+
+def run_prefetch_comparison(g, ids, n_train, reps=3):
+    """Measured wall-clock of one epoch: serial sample-then-step vs the
+    double-buffered prefetching pipeline.  Each mode gets a freshly built,
+    identically seeded system, so the two batch streams are bit-identical;
+    an untimed warm-up epoch excludes XLA compilation from both.  Epochs
+    alternate serial/prefetch for ``reps`` rounds and the MIN wall per mode
+    is compared — the container shares its host, so min-of-paired-runs
+    filters neighbor noise out of both sides equally."""
+    worker_cores = _pin_host_device_split()
+    trainers = {}
+    for mode, depth in (("serial", 0), ("prefetch", 2)):
+        system = GLISPSystem.build(g, GLISPConfig(
+            num_parts=2, fanouts=(15, 10, 5), batch_size=256,
+            prefetch=depth, seed=0,
+        ))
+        model = GNNModel("sage", g.vertex_feats.shape[1], hidden=64,
+                         num_layers=3, num_classes=3)
+        tr = system.trainer(model, ids[:n_train], opt=_opt(400),
+                            worker_cores=worker_cores)
+        tr.train(epochs=1, log_every=10**9)  # warm-up: compile all buckets
+        trainers[mode] = tr
+    walls = {mode: [] for mode in trainers}
+    splits = {}
+    for _ in range(reps):
+        for mode, tr in trainers.items():
+            s0, c0 = tr.pipeline.sample_time, tr.log.compute_time
+            t0 = time.perf_counter()
+            log = tr.train(epochs=1, log_every=10**9)
+            walls[mode].append(time.perf_counter() - t0)
+            splits[mode] = (log.sample_time - s0, log.compute_time - c0)
+    for mode in trainers:
+        emit(f"pipeline/{mode}/wall_s", min(walls[mode]))
+        emit(f"pipeline/{mode}/sample_s", splits[mode][0])
+        emit(f"pipeline/{mode}/compute_s", splits[mode][1])
+    emit(
+        "pipeline/prefetch_speedup",
+        min(walls["serial"]) / min(walls["prefetch"]),
+    )
+
+
+def _bench_data():
+    # power-law dataset with community structure (GCN/GAT need homophily)
+    g = _prep(dataset("ogbn-paper", scale=0.12))
+    ids = np.arange(g.num_vertices)
+    rng = np.random.default_rng(0)
+    rng.shuffle(ids)
+    return g, ids, int(0.7 * len(ids))
+
+
+def run_prefetch_comparison_subprocess():
+    """Re-exec the prefetch section in a fresh process: the host/device core
+    split must be installed before XLA creates its intra-op thread pool."""
+    root = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.pathsep.join(
+        p for p in [os.path.join(root, "src"), root, env.get("PYTHONPATH", "")] if p
+    )
+    subprocess.run(
+        [sys.executable, "-m", "benchmarks.train_e2e", "--prefetch-only"],
+        env=env,
+        cwd=root,
+        check=True,
+    )
+
+
+def run():
+    g, ids, n_train = _bench_data()
+    run_system_comparison(g, ids, n_train)
+    run_prefetch_comparison_subprocess()
+
+
 if __name__ == "__main__":
-    run()
+    if "--prefetch-only" in sys.argv:
+        run_prefetch_comparison(*_bench_data())
+    else:
+        run()

@@ -1,7 +1,9 @@
 """Full-graph inference demo (paper §III-D): layerwise engine vs naive
 samplewise on the same trained model — reports the redundancy eliminated,
 chunk reads, dynamic-cache hit ratio, and modeled retrieval speedup of the
-two-level cache with each reorder algorithm.
+two-level cache with each reorder algorithm.  The system (partitioner +
+sampling service) comes from the facade; the reorder algorithm is swapped
+per run through ``infer_layerwise(reorder=...)``.
 
     PYTHONPATH=src python examples/layerwise_inference.py
 """
@@ -10,19 +12,15 @@ import time
 
 import numpy as np
 
-from repro.core.inference import LayerwiseInferenceEngine, samplewise_inference
+from repro.api import GLISPConfig, GLISPSystem
+from repro.core.inference import samplewise_inference
 from repro.core.inference.store import IOCost
-from repro.core.partition import adadne
-from repro.core.sampling import GatherApplyClient, SamplingServer, VertexRouter
-from repro.graph import build_partitions, power_law_graph
+from repro.graph import power_law_graph
 
 g = power_law_graph(12000, avg_degree=8, seed=1, feat_dim=32)
-P = 4
-ep = adadne(g, P, seed=0)
-parts = build_partitions(g, ep, P)
-client = GatherApplyClient(
-    [SamplingServer(p, seed=0) for p in parts], VertexRouter(g, ep, P), seed=0
-)
+system = GLISPSystem.build(g, GLISPConfig(
+    num_parts=4, partitioner="adadne", fanouts=(10, 10), dynamic_frac=0.1,
+))
 
 rng = np.random.default_rng(0)
 W = [rng.standard_normal((64, 32)).astype(np.float32) * 0.3 for _ in range(2)]
@@ -46,12 +44,10 @@ cost = IOCost()
 print("reorder | chunk reads | dyn hit | modeled speedup vs raw DFS")
 for alg in ("NS", "DS", "PS", "PDS"):
     with tempfile.TemporaryDirectory() as td:
-        eng = LayerwiseInferenceEngine(
-            g, client, layers, g.vertex_feats, td, fanouts=[10, 10],
-            chunk_rows=512, out_dims=[32, 32], reorder_alg=alg,
-            batch_size=512, dynamic_frac=0.1,
+        res = system.infer_layerwise(
+            layers, td, chunk_rows=512, out_dims=[32, 32],
+            reorder=alg, batch_size=512,
         )
-        res = eng.run()
     reads = res.total_chunk_reads() + sum(s.cache.fill_chunks for s in res.layer_stats)
     baseline = (res.total_chunk_reads() + res.total_dynamic_hits()) * cost.dfs_ms
     speedup = baseline / max(res.modeled_io_ms(cost), 1e-9)
@@ -60,7 +56,7 @@ for alg in ("NS", "DS", "PS", "PDS"):
 # redundancy vs samplewise on a slice
 targets = rng.choice(g.num_vertices, 1024, replace=False)
 t0 = time.perf_counter()
-_, st = samplewise_inference(g, client, layers, g.vertex_feats, targets,
+_, st = samplewise_inference(g, system.client, layers, g.vertex_feats, targets,
                              fanouts=[10, 10], batch_size=64)
 t_sw = time.perf_counter() - t0
 per_target_sw = st["vertices_computed"] / targets.shape[0]

@@ -1,11 +1,14 @@
-"""Quickstart: the whole GLISP pipeline on a synthetic power-law graph.
+"""Quickstart: the whole GLISP pipeline on a synthetic power-law graph,
+driven entirely through the unified facade (repro.api).
 
     PYTHONPATH=src python examples/quickstart.py
 
 1. generate a power-law graph
-2. partition with AdaDNE (vertex-cut, balanced)
-3. launch the Gather-Apply sampling service
-4. train GraphSAGE for one epoch
+2. GLISPSystem.build — AdaDNE vertex-cut partitioning + Gather-Apply
+   sampling service, all resolved by registry name from GLISPConfig
+3. sample a K-hop subgraph through the one shared backend surface
+4. train GraphSAGE with the prefetching batch pipeline (host sampling
+   overlaps the jit'd train step)
 5. run layerwise full-graph inference with the two-level cache + PDS
 """
 import tempfile
@@ -13,15 +16,10 @@ import time
 
 import numpy as np
 
-from repro.core.inference import LayerwiseInferenceEngine
-from repro.core.partition import adadne
-from repro.core.sampling import GatherApplyClient, SamplingServer, VertexRouter
-from repro.graph import build_partitions, partition_metrics, power_law_graph
+from repro.api import GLISPConfig, GLISPSystem
+from repro.graph import power_law_graph
 from repro.models.gnn import GNNModel
-from repro.train import GNNTrainer
 from repro.train.optim import AdamWConfig
-
-P = 4
 
 print("== 1. generate graph ==")
 g = power_law_graph(8000, avg_degree=10, seed=0, feat_dim=32, num_classes=0)
@@ -31,41 +29,48 @@ g.vertex_feats[np.arange(g.num_vertices), g.labels] += 2.0
 print(f"   {g.num_vertices} vertices, {g.num_edges} edges, "
       f"max degree {int((g.out_degrees()+g.in_degrees()).max())}")
 
-print("== 2. AdaDNE vertex-cut partitioning ==")
+print("== 2. build the GLISP system ==")
+config = GLISPConfig(
+    num_parts=4,
+    partitioner="adadne",
+    sampler="gather_apply",
+    fanouts=(10, 5),
+    batch_size=256,
+    prefetch=2,          # background sampling overlaps the train step
+    reorder="pds",
+    cache_policy="fifo",
+)
 t0 = time.perf_counter()
-ep = adadne(g, P, seed=0)
-parts = build_partitions(g, ep, P)
-m = partition_metrics(parts, g.num_vertices)
+system = GLISPSystem.build(g, config)
+m = system.partition_metrics()
 print(f"   RF={m['RF']:.3f} VB={m['VB']:.3f} EB={m['EB']:.3f} "
       f"({time.perf_counter()-t0:.2f}s)")
 
-print("== 3. Gather-Apply sampling service ==")
-client = GatherApplyClient(
-    [SamplingServer(p, seed=0) for p in parts], VertexRouter(g, ep, P), seed=0
-)
-sub = client.sample_khop(np.arange(64), [15, 10, 5])
+print("== 3. sample through the unified backend ==")
+sub = system.sample(np.arange(64), fanouts=[15, 10, 5])
 print(f"   3-hop sample of 64 seeds: {sub.num_edges} edges, "
       f"{sub.all_vertices().shape[0]} vertices")
 
-print("== 4. train GraphSAGE ==")
+print("== 4. train GraphSAGE (prefetching pipeline) ==")
 ids = np.arange(g.num_vertices)
 model = GNNModel("sage", 32, hidden=64, num_layers=2, num_classes=3)
-trainer = GNNTrainer(model, client, g, [10, 5], ids[:6000], batch_size=256,
-                     opt=AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=200))
-log = trainer.train(epochs=2)
+trainer = system.train(
+    model, ids[:6000], epochs=2,
+    opt=AdamWConfig(lr=3e-3, warmup_steps=3, total_steps=200),
+)
+log = trainer.log
 acc = trainer.evaluate(ids[6000:])
 print(f"   loss {log.losses[0]:.3f} -> {log.losses[-1]:.3f}, test acc {acc:.3f}")
+print(f"   host sampling {log.sample_time:.1f}s overlapped with "
+      f"device compute {log.compute_time:.1f}s")
 
 print("== 5. layerwise full-graph inference ==")
-params = trainer.params
-layer_fns = [model.embed_layer_fn(params, k) for k in range(2)]
+layer_fns = [model.embed_layer_fn(trainer.params, k) for k in range(2)]
 with tempfile.TemporaryDirectory() as td:
-    eng = LayerwiseInferenceEngine(
-        g, client, layer_fns, g.vertex_feats, td, fanouts=[10, 5],
-        chunk_rows=1024, out_dims=[64, 64], reorder_alg="PDS",
-    )
     t0 = time.perf_counter()
-    res = eng.run()
+    res = system.infer_layerwise(
+        layer_fns, td, fanouts=[10, 5], chunk_rows=1024, out_dims=[64, 64]
+    )
     dt = time.perf_counter() - t0
 print(f"   embeddings for all {g.num_vertices} vertices in {dt:.1f}s | "
       f"chunk reads {res.total_chunk_reads()} | "

@@ -1,0 +1,42 @@
+"""repro.api — the unified GLISP system facade.
+
+One config, four registries, one build call:
+
+    from repro.api import GLISPConfig, GLISPSystem
+
+    system = GLISPSystem.build(graph, GLISPConfig(num_parts=4))
+    trainer = system.train(model, train_ids, epochs=2)
+
+See docs/api.md for the full surface and extension points.
+"""
+from repro.api.backends import (
+    CACHE_POLICIES,
+    PARTITIONERS,
+    REORDERS,
+    SAMPLERS,
+    EdgeCutBackend,
+    GatherApplyBackend,
+    PartitionPlan,
+    SamplerBackend,
+)
+from repro.api.config import GLISPConfig
+from repro.api.pipeline import BatchPipeline
+from repro.api.registry import Registry
+from repro.api.system import GLISPSystem
+from repro.core.sampling.service import DEFAULT_DIRECTION
+
+__all__ = [
+    "GLISPConfig",
+    "GLISPSystem",
+    "BatchPipeline",
+    "Registry",
+    "PartitionPlan",
+    "SamplerBackend",
+    "GatherApplyBackend",
+    "EdgeCutBackend",
+    "PARTITIONERS",
+    "SAMPLERS",
+    "REORDERS",
+    "CACHE_POLICIES",
+    "DEFAULT_DIRECTION",
+]

@@ -1,0 +1,245 @@
+"""Pluggable components behind the GLISP facade.
+
+Defines the four registries named by ``GLISPConfig`` string fields and the
+``SamplerBackend`` protocol that puts ``GatherApplyClient`` (GLISP) and
+``EdgeCutClient`` (DistDGL-style baseline) behind ONE sampling surface:
+
+    backend.sample(seeds, fanouts, weighted=..., direction=...) -> SampledSubgraph
+
+Both backends share the same default direction (``DEFAULT_DIRECTION``) and
+the same stats discipline — ``reset_stats()`` clears per-server counters AND
+the client's parallel/total work accumulators, which the raw clients handled
+inconsistently (callers had to poke ``client.parallel_work = 0.0`` by hand).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import TYPE_CHECKING, Protocol, runtime_checkable
+
+import numpy as np
+
+from repro.api.registry import Registry
+from repro.core.inference.cache import CachePolicy
+from repro.core.partition import (
+    adadne,
+    distributed_ne,
+    edge_cut_to_edge_assignment,
+    hash2d_partition,
+    ldg_edge_cut,
+    random_edge_partition,
+)
+from repro.core.sampling.service import (
+    DEFAULT_DIRECTION,
+    EdgeCutClient,
+    GatherApplyClient,
+    SampledSubgraph,
+    SamplingServer,
+    VertexRouter,
+)
+from repro.graph.graph import GraphPartition, HeteroGraph
+from repro.graph.reorder import REORDER_ALGS
+
+if TYPE_CHECKING:
+    from repro.api.config import GLISPConfig
+
+__all__ = [
+    "PartitionPlan",
+    "SamplerBackend",
+    "GatherApplyBackend",
+    "EdgeCutBackend",
+    "PARTITIONERS",
+    "SAMPLERS",
+    "REORDERS",
+    "CACHE_POLICIES",
+]
+
+
+# ---------------------------------------------------------------------------
+# Partitioners: name -> fn(g, num_parts, *, seed, direction) -> PartitionPlan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class PartitionPlan:
+    """Output of any registered partitioner.
+
+    ``edge_parts[e]`` is the partition id of edge e (the vertex-cut edge
+    assignment every backend builds from).  ``vertex_owner`` is set only by
+    edge-cut (vertex) partitioners and is required by the ``edge_cut``
+    sampler backend for owner routing."""
+
+    edge_parts: np.ndarray
+    vertex_owner: np.ndarray | None = None
+
+
+PARTITIONERS: Registry = Registry("partitioner")
+
+
+def _register_edge_partitioner(name: str, fn) -> None:
+    def _wrapped(
+        g: HeteroGraph,
+        num_parts: int,
+        *,
+        seed: int = 0,
+        direction: str = DEFAULT_DIRECTION,
+    ) -> PartitionPlan:
+        return PartitionPlan(edge_parts=fn(g, num_parts, seed=seed))
+
+    _wrapped.__name__ = f"partitioner_{name}"
+    PARTITIONERS.register(name, _wrapped)
+
+
+_register_edge_partitioner("adadne", adadne)
+_register_edge_partitioner("dne", distributed_ne)
+_register_edge_partitioner("hash2d", hash2d_partition)
+_register_edge_partitioner("random", random_edge_partition)
+
+
+@PARTITIONERS.register("ldg")
+def _ldg_plan(
+    g: HeteroGraph,
+    num_parts: int,
+    *,
+    seed: int = 0,
+    direction: str = DEFAULT_DIRECTION,
+) -> PartitionPlan:
+    """LDG streaming edge-cut: vertices get owners; edges follow the vertex
+    whose ``direction`` one-hop must stay local (so GLISP-vs-baseline
+    comparisons sample the same direction on both systems)."""
+    vp = ldg_edge_cut(g, num_parts, seed=seed)
+    ep = edge_cut_to_edge_assignment(g, vp, local_direction=direction)
+    return PartitionPlan(edge_parts=ep, vertex_owner=vp.astype(np.int64))
+
+
+# ---------------------------------------------------------------------------
+# Sampler backends
+# ---------------------------------------------------------------------------
+
+
+@runtime_checkable
+class SamplerBackend(Protocol):
+    """The one sampling surface the facade, trainer and engine consume."""
+
+    name: str
+
+    def sample(
+        self,
+        seeds: np.ndarray,
+        fanouts: list[int],
+        *,
+        weighted: bool = False,
+        direction: str = DEFAULT_DIRECTION,
+    ) -> SampledSubgraph: ...
+
+    def server_workloads(self) -> np.ndarray: ...
+
+    def reset_stats(self) -> None: ...
+
+
+class _ClientBackend:
+    """Shared adapter over the in-process simulation clients."""
+
+    name = "base"
+
+    def __init__(self, client):
+        self.client = client
+
+    def sample(
+        self,
+        seeds: np.ndarray,
+        fanouts: list[int],
+        *,
+        weighted: bool = False,
+        direction: str = DEFAULT_DIRECTION,
+    ) -> SampledSubgraph:
+        return self.client.sample_khop(
+            seeds, list(fanouts), weighted=weighted, direction=direction
+        )
+
+    def server_workloads(self) -> np.ndarray:
+        return self.client.server_workloads()
+
+    def reset_stats(self) -> None:
+        self.client.reset_stats()
+        self.client.parallel_work = 0.0
+        self.client.total_work = 0.0
+
+    @property
+    def parallel_work(self) -> float:
+        return self.client.parallel_work
+
+    @property
+    def total_work(self) -> float:
+        return self.client.total_work
+
+    def __repr__(self) -> str:
+        return f"{type(self).__name__}(servers={len(self.client.servers)})"
+
+
+class GatherApplyBackend(_ClientBackend):
+    """GLISP: vertex-cut servers, Gather from every host, Apply merge."""
+
+    name = "gather_apply"
+
+    @property
+    def router(self) -> VertexRouter:
+        return self.client.router
+
+
+class EdgeCutBackend(_ClientBackend):
+    """DistDGL-style baseline: one-hop answered only by the seed's owner."""
+
+    name = "edge_cut"
+
+    @property
+    def vertex_owner(self) -> np.ndarray:
+        return self.client.owner
+
+
+SAMPLERS: Registry = Registry("sampler backend")
+
+
+@SAMPLERS.register("gather_apply")
+def _build_gather_apply(
+    g: HeteroGraph,
+    plan: PartitionPlan,
+    parts: list[GraphPartition],
+    config: "GLISPConfig",
+) -> GatherApplyBackend:
+    cost = config.cost_model or "algd"
+    servers = [SamplingServer(p, seed=config.seed, cost_model=cost) for p in parts]
+    router = VertexRouter(g, plan.edge_parts, config.num_parts)
+    return GatherApplyBackend(GatherApplyClient(servers, router, seed=config.seed))
+
+
+@SAMPLERS.register("edge_cut")
+def _build_edge_cut(
+    g: HeteroGraph,
+    plan: PartitionPlan,
+    parts: list[GraphPartition],
+    config: "GLISPConfig",
+) -> EdgeCutBackend:
+    if plan.vertex_owner is None:
+        raise ValueError(
+            "the 'edge_cut' sampler backend needs a vertex partitioner that "
+            "produces owners (e.g. partitioner='ldg'); "
+            f"{config.partitioner!r} yields only a vertex-cut edge assignment"
+        )
+    cost = config.cost_model or "scan"
+    servers = [SamplingServer(p, seed=config.seed, cost_model=cost) for p in parts]
+    return EdgeCutBackend(
+        EdgeCutClient(servers, plan.vertex_owner, seed=config.seed)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Reorder algorithms and cache policies (thin: validate + canonicalize)
+# ---------------------------------------------------------------------------
+
+REORDERS: Registry = Registry("reorder algorithm")
+for _alg in REORDER_ALGS:
+    REORDERS.register(_alg, _alg)
+
+CACHE_POLICIES: Registry = Registry("cache policy")
+for _pol in CachePolicy:
+    CACHE_POLICIES.register(_pol.value, _pol)

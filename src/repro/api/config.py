@@ -1,0 +1,90 @@
+"""``GLISPConfig`` — one plain-data description of a full GLISP deployment.
+
+Every component is named by a registry string (see ``repro.api.backends``),
+so a config serializes to JSON and a whole pipeline is reproducible from it:
+
+    cfg = GLISPConfig(num_parts=4, partitioner="adadne", fanouts=(15, 10, 5))
+    system = GLISPSystem.build(g, cfg)
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+
+from repro.core.sampling.service import DEFAULT_DIRECTION, MAX_PARTS
+
+__all__ = ["GLISPConfig"]
+
+
+@dataclass(frozen=True)
+class GLISPConfig:
+    # -- partitioning --------------------------------------------------------
+    num_parts: int = 4
+    partitioner: str = "adadne"  # adadne | dne | ldg | hash2d | random
+
+    # -- sampling service ----------------------------------------------------
+    sampler: str = "gather_apply"  # gather_apply | edge_cut
+    fanouts: tuple = (10, 5)
+    direction: str = DEFAULT_DIRECTION  # shared by trainer/engine/loader
+    weighted: bool = False
+    # server cost model; None picks the backend's native one
+    # (gather_apply -> "algd", edge_cut -> "scan")
+    cost_model: str | None = None
+
+    # -- batch pipeline ------------------------------------------------------
+    batch_size: int = 256
+    prefetch: int = 2  # queue depth for background sampling; 0 = serial
+    balance_partitions: bool = False  # DistDGL-style balanced seeds
+    vertex_quantum: int = 256  # padding buckets for XLA static shapes
+    edge_quantum: int = 1024
+
+    # -- layerwise inference -------------------------------------------------
+    reorder: str = "pds"  # ns | ds | ps | pds | bfs
+    cache_policy: str = "fifo"  # fifo | lru
+    dynamic_frac: float = 0.10
+    chunk_rows: int = 4096
+    infer_batch_size: int = 4096
+
+    seed: int = 0
+
+    # -----------------------------------------------------------------------
+    def validate(self) -> "GLISPConfig":
+        """Check every registry name and numeric range; returns self."""
+        from repro.api.backends import (
+            CACHE_POLICIES,
+            PARTITIONERS,
+            REORDERS,
+            SAMPLERS,
+        )
+
+        if not 1 <= self.num_parts <= MAX_PARTS:
+            raise ValueError(
+                f"num_parts must be in [1, {MAX_PARTS}], got {self.num_parts}"
+            )
+        PARTITIONERS.get(self.partitioner)
+        SAMPLERS.get(self.sampler)
+        REORDERS.get(self.reorder)
+        CACHE_POLICIES.get(self.cache_policy)
+        if self.direction not in ("out", "in"):
+            raise ValueError(f"direction must be 'out' or 'in', got {self.direction!r}")
+        if self.cost_model not in (None, "algd", "scan"):
+            raise ValueError(
+                f"cost_model must be None, 'algd' or 'scan', got {self.cost_model!r}"
+            )
+        if not self.fanouts or any(f <= 0 for f in self.fanouts):
+            raise ValueError(f"fanouts must be positive, got {self.fanouts!r}")
+        if self.batch_size <= 0:
+            raise ValueError(f"batch_size must be positive, got {self.batch_size}")
+        if self.prefetch < 0:
+            raise ValueError(f"prefetch must be >= 0, got {self.prefetch}")
+        if not 0.0 <= self.dynamic_frac <= 1.0:
+            raise ValueError(f"dynamic_frac must be in [0, 1], got {self.dynamic_frac}")
+        return self
+
+    def replace(self, **kw) -> "GLISPConfig":
+        return dataclasses.replace(self, **kw)
+
+    def to_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["fanouts"] = list(self.fanouts)
+        return d

@@ -1,0 +1,254 @@
+"""The fused batch pipeline: seed loading -> K-hop sampling -> padded batch.
+
+``BatchPipeline`` composes ``SeedBatchLoader`` + ``backend.sample`` +
+``subgraph_to_batch`` behind one iterator and, with ``prefetch >= 1``, runs
+the host-side sampling ahead of the jit'd device step so the two overlap —
+turning ``sample_time + compute_time`` per step into roughly
+``max(sample_time, compute_time)``.
+
+Two worker modes:
+
+``process`` (default on POSIX) — a persistent forked worker owns the
+    sampling state and streams batches through a bounded queue.  CPython's
+    GIL makes a *thread* producer serialize against the consumer's Python
+    sections (numpy only releases the GIL for a handful of ops), so a
+    separate process is the only way host sampling truly runs beside XLA
+    compute — the same reason DGL/PyTorch dataloaders use worker processes.
+``thread`` — in-process double buffering via a daemon thread.  Zero-copy
+    hand-off, but overlap is limited to the consumer's GIL-released windows.
+
+Determinism: one persistent producer (process or thread) runs exactly the
+serial code path on the same initial state, so the batch stream is
+bit-identical to ``prefetch=0`` (tested in tests/test_api.py).  Note that in
+process mode the sampling-server RNG/stats live in the worker, so read
+workload counters with ``prefetch=0`` pipelines.
+"""
+from __future__ import annotations
+
+import multiprocessing as mp
+import os
+import queue as queue_mod
+import time
+import traceback
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.sampling.service import DEFAULT_DIRECTION
+from repro.data.graph_loader import SeedBatchLoader
+from repro.models.gnn.batching import GNNBatch, subgraph_to_batch
+from repro.utils import prefetch_iterator
+
+__all__ = ["BatchPipeline"]
+
+_FORK_AVAILABLE = os.name == "posix" and "fork" in mp.get_all_start_methods()
+
+
+class BatchPipeline:
+    def __init__(
+        self,
+        backend,
+        graph,
+        seeds: np.ndarray,
+        fanouts,
+        num_layers: int,
+        *,
+        batch_size: int = 256,
+        weighted: bool = False,
+        direction: str = DEFAULT_DIRECTION,
+        prefetch: int = 2,
+        workers: str = "auto",  # auto | process | thread
+        worker_cores: tuple | None = None,  # CPU affinity for process workers
+        seed: int = 0,
+        partition_of: np.ndarray | None = None,
+        balance_partitions: bool = False,
+        vertex_quantum: int = 256,
+        edge_quantum: int = 1024,
+    ):
+        if workers not in ("auto", "process", "thread"):
+            raise ValueError(
+                f"workers must be 'auto', 'process' or 'thread', got {workers!r}"
+            )
+        self.backend = backend
+        # accept a SamplerBackend or a raw GatherApply/EdgeCut client
+        self._sample = getattr(backend, "sample", None) or backend.sample_khop
+        self.graph = graph
+        self.fanouts = list(fanouts)
+        self.num_layers = num_layers
+        self.weighted = weighted
+        self.direction = direction
+        self.prefetch = prefetch
+        self.workers = (
+            ("process" if _FORK_AVAILABLE else "thread")
+            if workers == "auto"
+            else workers
+        )
+        self.worker_cores = worker_cores
+        self.vertex_quantum = vertex_quantum
+        self.edge_quantum = edge_quantum
+        self.loader = SeedBatchLoader(
+            seeds,
+            batch_size,
+            seed=seed,
+            partition_of=partition_of,
+            balance_partitions=balance_partitions,
+        )
+        self.sample_time = 0.0  # producer-side host time (sampling + padding)
+        self._proc = None
+        self._cmd_q = None
+        self._data_q = None
+        self._cancel = None  # mp.Event: stop the worker's current run early
+
+    # ------------------------------------------------------------------
+    def make_batch(self, seeds: np.ndarray) -> GNNBatch:
+        """One seed batch through sampling + padding (numpy, no prefetch)."""
+        sub = self._sample(
+            seeds, self.fanouts, weighted=self.weighted, direction=self.direction
+        )
+        return subgraph_to_batch(
+            sub,
+            self.graph.vertex_feats,
+            self.graph.labels,
+            self.num_layers,
+            edge_types=self.graph.edge_types,
+            vertex_quantum=self.vertex_quantum,
+            edge_quantum=self.edge_quantum,
+        )
+
+    def _produce_np(self, epochs: int):
+        """The serial producer: pure numpy, safe inside the forked worker."""
+        for _ in range(epochs):
+            for seeds in self.loader.epoch():
+                if self._cancel is not None and self._cancel.is_set():
+                    return
+                t0 = time.perf_counter()
+                batch = self.make_batch(seeds)
+                self.sample_time += time.perf_counter() - t0
+                yield seeds, batch
+
+    def _produce(self, epochs: int):
+        for seeds, batch in self._produce_np(epochs):
+            # host->device staging rides with the producer so the consumer's
+            # step loop is nothing but dispatch + block
+            yield seeds, jax.tree.map(jnp.asarray, batch)
+
+    def batches(self, epochs: int = 1):
+        """Yield ``(seeds, GNNBatch)`` with arrays staged as jax arrays;
+        sampling runs ahead of the consumer when ``prefetch >= 1``."""
+        if self.prefetch <= 0:
+            return self._produce(epochs)
+        if self.workers == "process" and _FORK_AVAILABLE:
+            return self._process_batches(epochs)
+        # thread mode: prefetch_iterator stops and joins its producer when
+        # the generator is closed/abandoned, so the shared loader/backend
+        # state is never mutated concurrently with a later epoch
+        return prefetch_iterator(self._produce(epochs), self.prefetch)
+
+    def __iter__(self):
+        return self.batches(1)
+
+    # -- process-mode plumbing -----------------------------------------
+    def _worker_loop(self):  # runs in the forked child: numpy only, no XLA
+        if self.worker_cores and hasattr(os, "sched_setaffinity"):
+            try:
+                # dedicate host cores to sampling (the consumer keeps the
+                # device cores), like dataloader-worker pinning in DGL
+                os.sched_setaffinity(0, set(self.worker_cores))
+            except OSError:
+                pass
+        while True:
+            cmd = self._cmd_q.get()
+            if cmd[0] == "stop":
+                return
+            try:
+                for seeds, batch in self._produce_np(cmd[1]):
+                    self._data_q.put(("item", seeds, batch))
+                self._data_q.put(("done", self.sample_time))
+            except BaseException as exc:  # noqa: BLE001 - re-raised in parent
+                self._data_q.put(
+                    ("error", f"{type(exc).__name__}: {exc}\n{traceback.format_exc()}")
+                )
+
+    def _ensure_worker(self):
+        if self._proc is not None and self._proc.is_alive():
+            return
+        ctx = mp.get_context("fork")
+        self._cmd_q = ctx.SimpleQueue()
+        self._data_q = ctx.Queue(maxsize=max(1, self.prefetch))
+        self._cancel = ctx.Event()
+        with warnings.catch_warnings():
+            # jax warns that fork + threads can deadlock; the child touches
+            # only numpy state, never XLA, which is the supported pattern
+            warnings.simplefilter("ignore", RuntimeWarning)
+            self._proc = ctx.Process(target=self._worker_loop, daemon=True)
+            self._proc.start()
+
+    def _next_msg(self):
+        """Queue read that notices a dead worker instead of hanging."""
+        while True:
+            try:
+                return self._data_q.get(timeout=1.0)
+            except queue_mod.Empty:
+                if self._proc is None or not self._proc.is_alive():
+                    code = self._proc.exitcode if self._proc is not None else None
+                    self.close()
+                    raise RuntimeError(
+                        f"prefetch worker died (exit code {code}) without "
+                        "reporting an error — likely killed (OOM?) or crashed "
+                        "in native code"
+                    )
+
+    def _process_batches(self, epochs: int):
+        self._ensure_worker()
+        self._cancel.clear()
+        self._cmd_q.put(("produce", epochs))
+        finished = False
+        try:
+            while True:
+                msg = self._next_msg()
+                if msg[0] == "done":
+                    finished = True
+                    self.sample_time = msg[1]  # worker's cumulative clock
+                    return
+                if msg[0] == "error":
+                    finished = True
+                    self.close()
+                    raise RuntimeError(f"prefetch worker failed:\n{msg[1]}")
+                _, seeds, batch = msg
+                yield seeds, jax.tree.map(jnp.asarray, batch)
+        finally:
+            if not finished and self._proc is not None:
+                # consumer stopped early (e.g. max_steps): cancel the run
+                # and drain the few in-flight items so the worker is idle
+                # (not sampling concurrently) before the next command
+                self._cancel.set()
+                while True:
+                    msg = self._next_msg()
+                    if msg[0] == "done":
+                        self.sample_time = msg[1]
+                        break
+                    if msg[0] == "error":
+                        self.close()
+                        raise RuntimeError(
+                            f"prefetch worker failed:\n{msg[1]}"
+                        )
+
+    def close(self) -> None:
+        """Stop the worker process (no-op for thread/serial modes)."""
+        proc, self._proc = self._proc, None
+        if proc is not None and proc.is_alive():
+            try:
+                self._cmd_q.put(("stop",))
+                proc.join(timeout=2)
+            except Exception:
+                pass
+            if proc.is_alive():
+                proc.terminate()
+
+    def __del__(self):  # best effort; daemon children die with the parent
+        try:
+            self.close()
+        except Exception:
+            pass

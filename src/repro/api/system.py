@@ -1,0 +1,254 @@
+"""``GLISPSystem`` — the single front door to the GLISP stack.
+
+    from repro.api import GLISPConfig, GLISPSystem
+
+    system = GLISPSystem.build(g, GLISPConfig(num_parts=4, fanouts=(15, 10, 5)))
+    sub = system.sample(seeds)                      # Gather-Apply K-hop
+    for seeds, batch in system.loader(train_ids):   # prefetching pipeline
+        ...
+    trainer = system.train(model, train_ids, epochs=2)
+    result = system.infer_layerwise(layer_fns, workdir)
+
+``build`` runs partitioner -> partition materialization -> sampler backend,
+each resolved by name from the registries in ``repro.api.backends``; no
+caller ever wires ``SamplingServer`` / ``VertexRouter`` by hand again.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.api.backends import (
+    CACHE_POLICIES,
+    PARTITIONERS,
+    REORDERS,
+    SAMPLERS,
+    GatherApplyBackend,
+    PartitionPlan,
+    SamplerBackend,
+)
+from repro.api.config import GLISPConfig
+from repro.api.pipeline import BatchPipeline
+from repro.graph.graph import GraphPartition, HeteroGraph, build_partitions
+from repro.graph.metrics import partition_metrics
+
+__all__ = ["GLISPSystem"]
+
+
+@dataclass
+class GLISPSystem:
+    graph: HeteroGraph
+    config: GLISPConfig
+    plan: PartitionPlan
+    partitions: list[GraphPartition]
+    backend: SamplerBackend
+    partition_seconds: float = 0.0
+    _metrics: dict | None = field(default=None, repr=False)
+
+    # ------------------------------------------------------------------
+    @classmethod
+    def build(cls, graph: HeteroGraph, config: GLISPConfig | None = None, **overrides):
+        """Compose the full system from a config (plus keyword overrides)."""
+        import time
+
+        config = (config or GLISPConfig()).replace(**overrides).validate()
+        t0 = time.perf_counter()
+        plan = PARTITIONERS.get(config.partitioner)(
+            graph, config.num_parts, seed=config.seed, direction=config.direction
+        )
+        dt = time.perf_counter() - t0  # the algorithm, not materialization
+        if config.balance_partitions and plan.vertex_owner is None:
+            raise ValueError(
+                "balance_partitions needs per-vertex owners, which only "
+                "vertex partitioners produce (e.g. partitioner='ldg'); "
+                f"{config.partitioner!r} yields a vertex-cut edge assignment"
+            )
+        parts = build_partitions(graph, plan.edge_parts, config.num_parts)
+        backend = SAMPLERS.get(config.sampler)(graph, plan, parts, config)
+        return cls(
+            graph=graph,
+            config=config,
+            plan=plan,
+            partitions=parts,
+            backend=backend,
+            partition_seconds=dt,
+        )
+
+    # -- sampling ------------------------------------------------------
+    @property
+    def client(self):
+        """The underlying simulation client (workload counters live here)."""
+        return self.backend.client
+
+    def sample(
+        self,
+        seeds: np.ndarray,
+        fanouts=None,
+        *,
+        weighted: bool | None = None,
+        direction: str | None = None,
+    ):
+        cfg = self.config
+        return self.backend.sample(
+            seeds,
+            list(fanouts if fanouts is not None else cfg.fanouts),
+            weighted=cfg.weighted if weighted is None else weighted,
+            direction=direction or cfg.direction,
+        )
+
+    def partition_metrics(self) -> dict:
+        if self._metrics is None:
+            self._metrics = partition_metrics(
+                self.partitions, self.graph.num_vertices
+            )
+        return self._metrics
+
+    def server_workloads(self) -> np.ndarray:
+        return self.backend.server_workloads()
+
+    def reset_stats(self) -> None:
+        self.backend.reset_stats()
+
+    # -- batch pipeline ------------------------------------------------
+    def loader(
+        self,
+        seeds: np.ndarray,
+        num_layers: int | None = None,
+        *,
+        batch_size: int | None = None,
+        prefetch: int | None = None,
+        seed: int | None = None,
+        fanouts=None,
+    ) -> BatchPipeline:
+        """A prefetching seed->batch pipeline over this system's backend."""
+        cfg = self.config
+        partition_of = (
+            self.plan.vertex_owner if cfg.balance_partitions else None
+        )
+        fanouts = list(fanouts if fanouts is not None else cfg.fanouts)
+        return BatchPipeline(
+            self.backend,
+            self.graph,
+            seeds,
+            fanouts,
+            num_layers if num_layers is not None else len(fanouts),
+            batch_size=batch_size if batch_size is not None else cfg.batch_size,
+            weighted=cfg.weighted,
+            direction=cfg.direction,
+            prefetch=prefetch if prefetch is not None else cfg.prefetch,
+            seed=cfg.seed if seed is None else seed,
+            partition_of=partition_of,
+            balance_partitions=cfg.balance_partitions,
+            vertex_quantum=cfg.vertex_quantum,
+            edge_quantum=cfg.edge_quantum,
+        )
+
+    # -- training ------------------------------------------------------
+    def trainer(
+        self,
+        model,
+        train_ids: np.ndarray,
+        *,
+        opt=None,
+        batch_size: int | None = None,
+        prefetch: int | None = None,
+        worker_cores: tuple | None = None,
+    ):
+        """A ``GNNTrainer`` wired to this system's backend and config."""
+        from repro.train.loop import GNNTrainer  # lazy: avoids import cycle
+
+        cfg = self.config
+        return GNNTrainer(
+            model,
+            self.backend,
+            self.graph,
+            list(cfg.fanouts),
+            train_ids,
+            batch_size=batch_size if batch_size is not None else cfg.batch_size,
+            opt=opt,
+            direction=cfg.direction,
+            seed=cfg.seed,
+            weighted=cfg.weighted,
+            prefetch=prefetch if prefetch is not None else cfg.prefetch,
+            worker_cores=worker_cores,
+            partition_of=(
+                self.plan.vertex_owner if cfg.balance_partitions else None
+            ),
+            balance_partitions=cfg.balance_partitions,
+        )
+
+    def train(
+        self,
+        model,
+        train_ids: np.ndarray,
+        *,
+        epochs: int = 1,
+        opt=None,
+        log_every: int = 10,
+        batch_size: int | None = None,
+        prefetch: int | None = None,
+        worker_cores: tuple | None = None,
+    ):
+        """Build a trainer, run ``epochs``, return the (trained) trainer."""
+        tr = self.trainer(
+            model,
+            train_ids,
+            opt=opt,
+            batch_size=batch_size,
+            prefetch=prefetch,
+            worker_cores=worker_cores,
+        )
+        tr.train(epochs=epochs, log_every=log_every)
+        return tr
+
+    # -- layerwise inference -------------------------------------------
+    def infer_layerwise(
+        self,
+        layer_fns: list,
+        workdir: str,
+        *,
+        feats: np.ndarray | None = None,
+        fanouts=None,
+        out_dims: list[int] | None = None,
+        reorder: str | None = None,
+        cache_policy: str | None = None,
+        chunk_rows: int | None = None,
+        dynamic_frac: float | None = None,
+        batch_size: int | None = None,
+    ):
+        """Run the redundancy-free layerwise engine over the whole graph."""
+        from repro.core.inference.engine import LayerwiseInferenceEngine
+
+        if not isinstance(self.backend, GatherApplyBackend):
+            raise ValueError(
+                "layerwise inference needs the 'gather_apply' sampler backend "
+                f"(vertex-cut hosting sets drive owner assignment); this "
+                f"system uses {self.config.sampler!r}"
+            )
+        cfg = self.config
+        if fanouts is None and len(cfg.fanouts) >= len(layer_fns):
+            # follow the config like every other facade method; a config
+            # with fewer fanouts than layers falls back to the engine default
+            fanouts = cfg.fanouts[: len(layer_fns)]
+        engine = LayerwiseInferenceEngine(
+            self.graph,
+            self.client,
+            layer_fns,
+            self.graph.vertex_feats if feats is None else feats,
+            workdir,
+            fanouts=list(fanouts) if fanouts is not None else None,
+            reorder_alg=REORDERS.get(reorder or cfg.reorder),
+            chunk_rows=chunk_rows if chunk_rows is not None else cfg.chunk_rows,
+            policy=CACHE_POLICIES.get(cache_policy or cfg.cache_policy),
+            dynamic_frac=(
+                dynamic_frac if dynamic_frac is not None else cfg.dynamic_frac
+            ),
+            batch_size=(
+                batch_size if batch_size is not None else cfg.infer_batch_size
+            ),
+            direction=cfg.direction,
+            out_dims=out_dims,
+            seed=cfg.seed,
+        )
+        return engine.run()

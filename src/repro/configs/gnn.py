@@ -27,6 +27,26 @@ class GNNExperimentConfig:
     direction: str = "out"
 
 
+    def to_glisp_config(self, **overrides):
+        """System half of this experiment as a ``repro.api.GLISPConfig``
+        (the model half stays here: model/hidden/num_layers/num_heads)."""
+        from repro.api import GLISPConfig
+
+        sampler = "edge_cut" if self.partitioner == "ldg" else "gather_apply"
+        cfg = GLISPConfig(
+            num_parts=self.num_parts,
+            partitioner=self.partitioner,  # validate() rejects unknown names
+            sampler=sampler,
+            fanouts=tuple(self.fanouts),
+            weighted=self.weighted,
+            direction=self.direction,
+            batch_size=self.batch_size,
+        )
+        if overrides:
+            cfg = cfg.replace(**overrides)
+        return cfg.validate()
+
+
 GNN_CONFIGS = {
     "gcn-products": GNNExperimentConfig(
         name="gcn-products", dataset="ogbn-products", num_parts=2, model="gcn"

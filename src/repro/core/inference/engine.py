@@ -19,7 +19,11 @@ import numpy as np
 
 from repro.core.inference.cache import CachePolicy, CacheStats, TwoLevelCache
 from repro.core.inference.store import ChunkedEmbeddingStore, IOCost
-from repro.core.sampling.service import GatherApplyClient
+from repro.core.sampling.service import (
+    DEFAULT_DIRECTION,
+    MAX_PARTS,
+    GatherApplyClient,
+)
 from repro.graph.graph import GraphPartition, HeteroGraph
 from repro.graph.reorder import reorder_permutation
 
@@ -35,6 +39,11 @@ def assign_inference_owners(
 ) -> np.ndarray:
     """One inference owner per vertex: interior vertices go to their partition;
     boundary vertices go greedily to their least-loaded hosting partition."""
+    if num_parts > MAX_PARTS:
+        raise ValueError(
+            f"assign_inference_owners supports at most {MAX_PARTS} partitions "
+            f"(uint64 hosting bitmask), got num_parts={num_parts}"
+        )
     n = router_mask.shape[0]
     owner = np.full(n, -1, dtype=np.int16)
     loads = np.zeros(num_parts, dtype=np.int64)
@@ -106,10 +115,10 @@ class LayerwiseInferenceEngine:
         fanouts: list[int] | None = None,
         reorder_alg: str = "PDS",
         chunk_rows: int = 4096,
-        policy: CachePolicy = CachePolicy.FIFO,
+        policy: CachePolicy | str = CachePolicy.FIFO,
         dynamic_frac: float = 0.10,
         batch_size: int = 4096,
-        direction: str = "out",
+        direction: str = DEFAULT_DIRECTION,
         out_dims: list[int] | None = None,
         seed: int = 0,
     ):
@@ -121,7 +130,7 @@ class LayerwiseInferenceEngine:
         self.fanouts = fanouts or [10] * len(layer_fns)
         self.reorder_alg = reorder_alg
         self.chunk_rows = chunk_rows
-        self.policy = policy
+        self.policy = CachePolicy(policy)
         self.dynamic_frac = dynamic_frac
         self.batch_size = batch_size
         self.direction = direction

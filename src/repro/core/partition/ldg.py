@@ -11,6 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.core.sampling.service import DEFAULT_DIRECTION
 from repro.graph.graph import HeteroGraph
 
 __all__ = ["ldg_edge_cut", "edge_cut_to_edge_assignment"]
@@ -55,8 +56,18 @@ def ldg_edge_cut(
     return assign
 
 
-def edge_cut_to_edge_assignment(g: HeteroGraph, vertex_parts: np.ndarray) -> np.ndarray:
-    """DistDGL convention: an edge lives on the partition of its DESTINATION
-    vertex (in-edges of owned vertices are local so one-hop in-sampling never
-    leaves the server)."""
-    return vertex_parts[g.dst].astype(np.int16)
+def edge_cut_to_edge_assignment(
+    g: HeteroGraph,
+    vertex_parts: np.ndarray,
+    local_direction: str = DEFAULT_DIRECTION,
+) -> np.ndarray:
+    """An edge lives on the partition of the vertex whose ``local_direction``
+    one-hop must be answered locally.  The default follows the stack-wide
+    ``DEFAULT_DIRECTION`` so hand-wired baselines sample coherently with the
+    clients' default; pass ``"in"`` for the strict DistDGL convention
+    (edges assigned by DESTINATION owner, in-sampling never leaves the
+    server) together with ``direction="in"`` sampling."""
+    if local_direction not in ("in", "out"):
+        raise ValueError(f"local_direction must be 'in' or 'out', got {local_direction!r}")
+    anchor = g.dst if local_direction == "in" else g.src
+    return vertex_parts[anchor].astype(np.int16)

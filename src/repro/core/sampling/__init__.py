@@ -1,5 +1,7 @@
 from repro.core.sampling.algorithms import algorithm_d, algorithm_a_es, uniform_sample
 from repro.core.sampling.service import (
+    DEFAULT_DIRECTION,
+    MAX_PARTS,
     SamplingServer,
     VertexRouter,
     GatherApplyClient,
@@ -12,6 +14,8 @@ __all__ = [
     "algorithm_d",
     "algorithm_a_es",
     "uniform_sample",
+    "DEFAULT_DIRECTION",
+    "MAX_PARTS",
     "SamplingServer",
     "VertexRouter",
     "GatherApplyClient",

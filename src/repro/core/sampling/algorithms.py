@@ -131,7 +131,10 @@ def algorithm_a_es(
     w = np.asarray(weights, dtype=np.float64)
     with np.errstate(divide="ignore", invalid="ignore"):
         scores = np.where(w > 0, u ** (1.0 / np.maximum(w, 1e-300)), 0.0)
-    k = min(k, n)
+    # never pad the draw with zero-weight items (P ∝ w means P = 0)
+    k = min(k, int((w > 0).sum()))
+    if k <= 0:
+        return np.zeros(0, np.int64), np.zeros(0, np.float64)
     if k == n:
         idx = np.argsort(-scores, kind="stable")
     else:

@@ -26,10 +26,11 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.sampling.algorithms import algorithm_a_es, uniform_sample
 from repro.graph.graph import GraphPartition, HeteroGraph
 
 __all__ = [
+    "DEFAULT_DIRECTION",
+    "MAX_PARTS",
     "VertexRouter",
     "SamplingServer",
     "GatherApplyClient",
@@ -37,6 +38,15 @@ __all__ = [
     "SampledHop",
     "SampledSubgraph",
 ]
+
+# One shared default for every sampler surface (clients, trainer, inference
+# engine).  GLISP samples along OUT edges; baselines must use the same
+# direction or comparisons silently skew.
+DEFAULT_DIRECTION = "out"
+
+# The router packs hosting sets into a uint64 bitmask; more partitions than
+# bits silently alias (1 << p wraps), corrupting routing.
+MAX_PARTS = 64
 
 
 # ---------------------------------------------------------------------------
@@ -48,6 +58,11 @@ class VertexRouter:
     """Vertex -> set of partitions (bitmask), built from the edge assignment."""
 
     def __init__(self, g: HeteroGraph, edge_parts: np.ndarray, num_parts: int):
+        if num_parts > MAX_PARTS:
+            raise ValueError(
+                f"VertexRouter supports at most {MAX_PARTS} partitions "
+                f"(uint64 hosting bitmask), got num_parts={num_parts}"
+            )
         mask = np.zeros(g.num_vertices, dtype=np.uint64)
         for p in range(num_parts):
             sel = edge_parts == p
@@ -121,9 +136,30 @@ class SamplingServer:
             else self.part.in_degrees[lids]
         )
 
+    @staticmethod
+    def _flatten_slices(starts: np.ndarray, lens: np.ndarray):
+        """(slots, seg): concatenated ``arange(starts[i], starts[i]+lens[i])``
+        plus the owning seed index per slot — one vectorized pass, no Python
+        loop (the sampling hot path runs on the prefetch thread and must not
+        hog the GIL)."""
+        total = int(lens.sum())
+        if total == 0:
+            return np.zeros(0, np.int64), np.zeros(0, np.int64)
+        cum = np.cumsum(lens) - lens
+        ranges = np.arange(total, dtype=np.int64) - np.repeat(cum, lens)
+        slots = np.repeat(starts, lens) + ranges
+        seg = np.repeat(np.arange(lens.shape[0], dtype=np.int64), lens)
+        return slots, seg
+
+    def _eid_global(self, eids_local: np.ndarray) -> np.ndarray:
+        """Local edge ids -> global edge ids (identity if the partition was
+        built before ``edge_global_id`` existed)."""
+        eg = self.part.edge_global_id
+        return eids_local if eg is None else eg[eids_local].astype(np.int64)
+
     # -- UniformGatherOp (Alg. 2) -------------------------------------------
     def uniform_gather(
-        self, seeds_gid: np.ndarray, fanout: int, direction: str = "out"
+        self, seeds_gid: np.ndarray, fanout: int, direction: str = DEFAULT_DIRECTION
     ):
         p = self.part
         lids = p.global_to_local(seeds_gid)
@@ -139,16 +175,6 @@ class SamplingServer:
         k += self.rng.random(k.shape[0]) < (r - k)  # randomized rounding
         k = np.minimum(k, local_deg)
 
-        out_seed, out_nbr, out_eid = [], [], []
-        for i in range(seeds_gid.shape[0]):
-            if k[i] <= 0:
-                continue
-            idx = uniform_sample(int(local_deg[i]), int(k[i]), self.rng)
-            slots = starts[i] + idx
-            out_nbr.append(nbr[slots])
-            out_eid.append(slots if eid_of_slot is None else eid_of_slot[slots])
-            out_seed.append(np.full(idx.shape[0], seeds_gid[i], dtype=np.int64))
-
         self.stats.requests += 1
         self.stats.seeds += int(seeds_gid.shape[0])
         if self.cost_model == "algd":
@@ -157,18 +183,32 @@ class SamplingServer:
         else:
             # adjacency-slice walk: O(local_deg) per seed
             self.stats.work_units += float(local_deg.sum()) + seeds_gid.shape[0]
-        if not out_seed:
+
+        # vectorized k-of-n per seed: draw one uniform key per local edge
+        # slot, keep each seed's k smallest — distribution-identical to
+        # Algorithm D (uniform without replacement); the *cost model* above
+        # still charges O(k) per the paper's design
+        sel = k > 0
+        if not sel.any():
             return (np.zeros(0, np.int64),) * 3
-        s = np.concatenate(out_seed)
-        n = p.local_to_global(np.concatenate(out_nbr))
-        e = np.concatenate(out_eid)
+        slots, seg = self._flatten_slices(starts[sel], local_deg[sel])
+        u = self.rng.random(slots.shape[0])
+        order = np.lexsort((u, seg))
+        seg_s, slots_s = seg[order], slots[order]
+        keep = _group_rank(seg_s) < k[sel][seg_s]
+        seg_k, slots_k = seg_s[keep], slots_s[keep]
+        s = seeds_gid[sel][seg_k]
+        n = p.local_to_global(nbr[slots_k])
+        e = self._eid_global(
+            slots_k if eid_of_slot is None else eid_of_slot[slots_k]
+        )
         self.stats.edges_returned += s.shape[0]
         self.stats.bytes_out += s.nbytes + n.nbytes
         return s, n, e
 
     # -- WeightedGatherOp (Alg. 3) -------------------------------------------
     def weighted_gather(
-        self, seeds_gid: np.ndarray, fanout: int, direction: str = "out"
+        self, seeds_gid: np.ndarray, fanout: int, direction: str = DEFAULT_DIRECTION
     ):
         p = self.part
         assert p.edge_weights is not None, "graph has no edge weights"
@@ -176,35 +216,46 @@ class SamplingServer:
         ok = lids >= 0
         seeds_gid, lids = seeds_gid[ok], lids[ok]
         if seeds_gid.shape[0] == 0:
-            return (np.zeros(0, np.int64),) * 2 + (np.zeros(0, np.float64),)
+            return (np.zeros(0, np.int64),) * 2 + (
+                np.zeros(0, np.float64),
+                np.zeros(0, np.int64),
+            )
         starts, ends, nbr, eid_of_slot = self._slices(lids, direction)
         local_deg = (ends - starts).astype(np.int64)
-
-        out_seed, out_nbr, out_score = [], [], []
-        for i in range(seeds_gid.shape[0]):
-            d = int(local_deg[i])
-            if d == 0:
-                continue
-            slots = np.arange(starts[i], ends[i])
-            eids = slots if eid_of_slot is None else eid_of_slot[slots]
-            w = p.edge_weights[eids]
-            idx, scores = algorithm_a_es(w, fanout, self.rng)
-            out_nbr.append(nbr[slots[idx]])
-            out_score.append(scores)
-            out_seed.append(np.full(idx.shape[0], seeds_gid[i], dtype=np.int64))
 
         self.stats.requests += 1
         self.stats.seeds += int(seeds_gid.shape[0])
         # A-ES scans every local neighbor weight: O(local_deg) per seed
         self.stats.work_units += float(local_deg.sum()) + seeds_gid.shape[0]
-        if not out_seed:
-            return (np.zeros(0, np.int64),) * 2 + (np.zeros(0, np.float64),)
-        s = np.concatenate(out_seed)
-        n = p.local_to_global(np.concatenate(out_nbr))
-        sc = np.concatenate(out_score)
+
+        # vectorized A-ES (Efraimidis–Spirakis): score u^{1/w} per local
+        # edge, per-seed top-f by score — one lexsort over the flattened
+        # neighbor slices instead of a Python loop per seed
+        slots, seg = self._flatten_slices(starts, local_deg)
+        if slots.shape[0] == 0:
+            return (np.zeros(0, np.int64),) * 2 + (
+                np.zeros(0, np.float64),
+                np.zeros(0, np.int64),
+            )
+        eids = slots if eid_of_slot is None else eid_of_slot[slots]
+        w = p.edge_weights[eids].astype(np.float64)
+        u = self.rng.random(slots.shape[0])
+        with np.errstate(divide="ignore", invalid="ignore"):
+            scores = np.where(w > 0, u ** (1.0 / np.maximum(w, 1e-300)), 0.0)
+        order = np.lexsort((-scores, seg))
+        seg_s = seg[order]
+        # P(select) ∝ weight: zero/negative-weight edges are never returned,
+        # even when a seed has fewer than `fanout` positive-weight neighbors
+        keep = (_group_rank(seg_s) < fanout) & (scores[order] > 0)
+        kept = order[keep]
+        seg_k = seg[kept]
+        s = seeds_gid[seg_k]
+        n = p.local_to_global(nbr[slots[kept]])
+        sc = scores[kept]
+        e = self._eid_global(eids[kept])
         self.stats.edges_returned += s.shape[0]
         self.stats.bytes_out += s.nbytes + n.nbytes + sc.nbytes
-        return s, n, sc
+        return s, n, sc, e
 
 
 # ---------------------------------------------------------------------------
@@ -216,6 +267,9 @@ class SamplingServer:
 class SampledHop:
     src: np.ndarray  # seed gids, repeated per sampled edge
     dst: np.ndarray  # sampled neighbor gids
+    # global edge id per sampled edge (None for partitions built before
+    # edge_global_id existed); lets consumers read edge types/weights directly
+    eid: np.ndarray | None = None
 
 
 @dataclass
@@ -237,50 +291,50 @@ class SampledSubgraph:
 # ---------------------------------------------------------------------------
 
 
-def _trim_uniform(
-    seed_arr: np.ndarray, nbr_arr: np.ndarray, fanout: int, rng: np.random.Generator
-):
-    """UniformApplyOp: join per-server results; trim any seed's surplus
-    (randomized rounding can overshoot f by a draw or two) uniformly."""
-    if seed_arr.shape[0] == 0:
-        return seed_arr, nbr_arr
-    # random permutation then stable-sort by seed => random order within seed
-    perm = rng.permutation(seed_arr.shape[0])
-    seed_arr, nbr_arr = seed_arr[perm], nbr_arr[perm]
-    order = np.argsort(seed_arr, kind="stable")
-    seed_arr, nbr_arr = seed_arr[order], nbr_arr[order]
-    # rank within each seed group
+def _group_rank(seed_arr: np.ndarray) -> np.ndarray:
+    """Rank of each element within its (sorted, contiguous) seed group."""
     change = np.empty(seed_arr.shape[0], dtype=bool)
     change[0] = True
     change[1:] = seed_arr[1:] != seed_arr[:-1]
     group_start = np.maximum.accumulate(
         np.where(change, np.arange(seed_arr.shape[0]), 0)
     )
-    rank = np.arange(seed_arr.shape[0]) - group_start
-    keep = rank < fanout
-    return seed_arr[keep], nbr_arr[keep]
+    return np.arange(seed_arr.shape[0]) - group_start
+
+
+def _trim_uniform(
+    seed_arr: np.ndarray,
+    nbr_arr: np.ndarray,
+    eid_arr: np.ndarray,
+    fanout: int,
+    rng: np.random.Generator,
+):
+    """UniformApplyOp: join per-server results; trim any seed's surplus
+    (randomized rounding can overshoot f by a draw or two) uniformly."""
+    if seed_arr.shape[0] == 0:
+        return seed_arr, nbr_arr, eid_arr
+    # random permutation then stable-sort by seed => random order within seed
+    perm = rng.permutation(seed_arr.shape[0])
+    order = perm[np.argsort(seed_arr[perm], kind="stable")]
+    seed_arr, nbr_arr, eid_arr = seed_arr[order], nbr_arr[order], eid_arr[order]
+    keep = _group_rank(seed_arr) < fanout
+    return seed_arr[keep], nbr_arr[keep], eid_arr[keep]
 
 
 def _topk_by_score(
     seed_arr: np.ndarray,
     nbr_arr: np.ndarray,
+    eid_arr: np.ndarray,
     score_arr: np.ndarray,
     fanout: int,
 ):
     """WeightedApplyOp: global top-f per seed by A-ES score (Alg. 4)."""
     if seed_arr.shape[0] == 0:
-        return seed_arr, nbr_arr
+        return seed_arr, nbr_arr, eid_arr
     order = np.lexsort((-score_arr, seed_arr))
-    seed_arr, nbr_arr = seed_arr[order], nbr_arr[order]
-    change = np.empty(seed_arr.shape[0], dtype=bool)
-    change[0] = True
-    change[1:] = seed_arr[1:] != seed_arr[:-1]
-    group_start = np.maximum.accumulate(
-        np.where(change, np.arange(seed_arr.shape[0]), 0)
-    )
-    rank = np.arange(seed_arr.shape[0]) - group_start
-    keep = rank < fanout
-    return seed_arr[keep], nbr_arr[keep]
+    seed_arr, nbr_arr, eid_arr = seed_arr[order], nbr_arr[order], eid_arr[order]
+    keep = _group_rank(seed_arr) < fanout
+    return seed_arr[keep], nbr_arr[keep], eid_arr[keep]
 
 
 class GatherApplyClient:
@@ -295,6 +349,12 @@ class GatherApplyClient:
         self.servers = servers
         self.router = router
         self.rng = np.random.default_rng(seed)
+        # eids are only meaningful when EVERY server can map to global ids
+        # (partitions persisted before edge_global_id existed return local
+        # slots, which must not be mistaken for global edge ids)
+        self.has_global_eids = all(
+            s.part.edge_global_id is not None for s in servers
+        )
         # modeled wall-clock work: servers run in parallel, so a hop costs the
         # MAX of the per-server work deltas (the in-process simulation is
         # serial; benchmarks use this to report parallel-cluster latency)
@@ -306,25 +366,26 @@ class GatherApplyClient:
         seeds: np.ndarray,
         fanouts: list[int],
         weighted: bool = False,
-        direction: str = "out",
+        direction: str = DEFAULT_DIRECTION,
     ) -> SampledSubgraph:
         seeds = np.unique(np.asarray(seeds, dtype=np.int64))
         result = SampledSubgraph(seeds=seeds)
         frontier = seeds
         for f in fanouts:
             routed = self.router.servers_of(frontier)
-            parts_s, parts_n, parts_x = [], [], []
+            parts_s, parts_n, parts_x, parts_e = [], [], [], []
             w0 = [srv.stats.work_units for srv in self.servers]
             for srv, sub in zip(self.servers, routed):
                 if sub.shape[0] == 0:
                     continue
                 if weighted:
-                    s, n, sc = srv.weighted_gather(sub, f, direction)
+                    s, n, sc, e = srv.weighted_gather(sub, f, direction)
+                    parts_x.append(sc)
                 else:
-                    s, n, sc = srv.uniform_gather(sub, f, direction)
+                    s, n, e = srv.uniform_gather(sub, f, direction)
                 parts_s.append(s)
                 parts_n.append(n)
-                parts_x.append(sc)
+                parts_e.append(e)
             deltas = [
                 srv.stats.work_units - w for srv, w in zip(self.servers, w0)
             ]
@@ -333,14 +394,17 @@ class GatherApplyClient:
             if parts_s:
                 s = np.concatenate(parts_s)
                 n = np.concatenate(parts_n)
+                e = np.concatenate(parts_e)
                 if weighted:
                     sc = np.concatenate(parts_x)
-                    s, n = _topk_by_score(s, n, sc, f)
+                    s, n, e = _topk_by_score(s, n, e, sc, f)
                 else:
-                    s, n = _trim_uniform(s, n, f, self.rng)
+                    s, n, e = _trim_uniform(s, n, e, f, self.rng)
             else:
-                s = n = np.zeros(0, np.int64)
-            result.hops.append(SampledHop(src=s, dst=n))
+                s = n = e = np.zeros(0, np.int64)
+            result.hops.append(
+                SampledHop(src=s, dst=n, eid=e if self.has_global_eids else None)
+            )
             frontier = np.unique(n)  # GetSeedsOfNextHop
             if frontier.shape[0] == 0:
                 break
@@ -370,6 +434,9 @@ class EdgeCutClient(GatherApplyClient):
         self.servers = servers
         self.owner = vertex_owner
         self.rng = np.random.default_rng(seed)
+        self.has_global_eids = all(
+            s.part.edge_global_id is not None for s in servers
+        )
         self.parallel_work = 0.0
         self.total_work = 0.0
 
@@ -378,13 +445,13 @@ class EdgeCutClient(GatherApplyClient):
         seeds: np.ndarray,
         fanouts: list[int],
         weighted: bool = False,
-        direction: str = "in",
+        direction: str = DEFAULT_DIRECTION,
     ) -> SampledSubgraph:
         seeds = np.unique(np.asarray(seeds, dtype=np.int64))
         result = SampledSubgraph(seeds=seeds)
         frontier = seeds
         for f in fanouts:
-            parts_s, parts_n = [], []
+            parts_s, parts_n, parts_e = [], [], []
             owners = self.owner[frontier]
             w0 = [srv.stats.work_units for srv in self.servers]
             for p, srv in enumerate(self.servers):
@@ -392,12 +459,13 @@ class EdgeCutClient(GatherApplyClient):
                 if sub.shape[0] == 0:
                     continue
                 if weighted:
-                    s, n, sc = srv.weighted_gather(sub, f, direction)
-                    s, n = _topk_by_score(s, n, sc, f)
+                    s, n, sc, e = srv.weighted_gather(sub, f, direction)
+                    s, n, e = _topk_by_score(s, n, e, sc, f)
                 else:
-                    s, n, _ = srv.uniform_gather(sub, f, direction)
+                    s, n, e = srv.uniform_gather(sub, f, direction)
                 parts_s.append(s)
                 parts_n.append(n)
+                parts_e.append(e)
             deltas = [
                 srv.stats.work_units - w for srv, w in zip(self.servers, w0)
             ]
@@ -405,7 +473,10 @@ class EdgeCutClient(GatherApplyClient):
             self.total_work += sum(deltas)
             s = np.concatenate(parts_s) if parts_s else np.zeros(0, np.int64)
             n = np.concatenate(parts_n) if parts_n else np.zeros(0, np.int64)
-            result.hops.append(SampledHop(src=s, dst=n))
+            e = np.concatenate(parts_e) if parts_e else np.zeros(0, np.int64)
+            result.hops.append(
+                SampledHop(src=s, dst=n, eid=e if self.has_global_eids else None)
+            )
             frontier = np.unique(n)
             if frontier.shape[0] == 0:
                 break

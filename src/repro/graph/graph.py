@@ -164,6 +164,7 @@ _FIELDS = [
     "in_degrees",
     "partition_bits",
     "edge_weights",
+    "edge_global_id",
 ]
 
 
@@ -188,6 +189,10 @@ class GraphPartition:
     in_degrees: np.ndarray
     partition_bits: np.ndarray
     edge_weights: np.ndarray | None = None
+    # global edge id per local edge (CSR out order); lets sampling return ids
+    # that index the global graph's edge_types/edge_weights.  None for
+    # partitions persisted before this field existed.
+    edge_global_id: np.ndarray | None = None
 
     # -- sizes ----------------------------------------------------------------
     @property
@@ -386,6 +391,7 @@ def build_partitions(
                     if g.edge_weights is not None
                     else None
                 ),
+                edge_global_id=eids_sorted.astype(np.int64),
             )
         )
     return parts

@@ -48,6 +48,7 @@ def subgraph_to_batch(
     labels: np.ndarray | None,
     num_layers: int,
     edge_types_lookup=None,  # optional fn (src_gid, dst_gid) -> etype
+    edge_types: np.ndarray | None = None,  # global per-edge type table
     vertex_quantum: int = 256,
     edge_quantum: int = 1024,
 ) -> GNNBatch:
@@ -71,14 +72,23 @@ def subgraph_to_batch(
         hops = sub.hops[: K - k]
         src = np.concatenate([h.src for h in hops]) if hops else np.zeros(0, np.int64)
         dst = np.concatenate([h.dst for h in hops]) if hops else np.zeros(0, np.int64)
+        eid = (
+            np.concatenate([h.eid for h in hops])
+            if hops and all(h.eid is not None for h in hops)
+            else None
+        )
         epad = _bucket(src.shape[0], edge_quantum)
         d_pos = np.full(epad, -1, dtype=np.int32)
         s_pos = np.full(epad, -1, dtype=np.int32)
         et = np.zeros(epad, dtype=np.int32)
         d_pos[: src.shape[0]] = np.searchsorted(verts, src)  # aggregation target
         s_pos[: src.shape[0]] = np.searchsorted(verts, dst)  # message source
-        if edge_types_lookup is not None and src.shape[0]:
-            et[: src.shape[0]] = edge_types_lookup(src, dst)
+        if src.shape[0]:
+            if edge_types is not None and eid is not None:
+                # direct: sampled edge ids index the global edge-type table
+                et[: src.shape[0]] = edge_types[eid]
+            elif edge_types_lookup is not None:
+                et[: src.shape[0]] = edge_types_lookup(src, dst)
         layer_dst.append(d_pos)
         layer_src.append(s_pos)
         layer_et.append(et)

@@ -1,9 +1,11 @@
 """Training loops.
 
-``GNNTrainer`` — the paper's end-to-end pipeline: GLISP sampling service on
-the host feeds padded minibatches into a jit'd AdamW step (the Fig. 11
-workload).  ``LMTrainer`` — causal-LM training for the assigned architecture
-pool (synthetic token stream), used by smoke tests and the quickstart.
+``GNNTrainer`` — the paper's end-to-end pipeline: the GLISP batch pipeline
+(``repro.api.pipeline.BatchPipeline``) feeds padded minibatches into a jit'd
+AdamW step (the Fig. 11 workload).  With ``prefetch >= 1`` host-side
+sampling runs on a background thread and overlaps the device step.
+``LMTrainer`` — causal-LM training for the assigned architecture pool
+(synthetic token stream), used by smoke tests and the quickstart.
 """
 from __future__ import annotations
 
@@ -14,9 +16,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api.pipeline import BatchPipeline
+from repro.core.sampling.service import DEFAULT_DIRECTION
 from repro.data.graph_loader import SeedBatchLoader
 from repro.data.tokens import SyntheticTokenStream
-from repro.models.gnn.batching import subgraph_to_batch
 from repro.models.gnn.models import GNNModel
 from repro.models.transformer.config import ArchConfig
 from repro.models.transformer.model import forward, init_params, lm_loss
@@ -40,22 +43,42 @@ class GNNTrainer:
     def __init__(
         self,
         model: GNNModel,
-        client,  # GatherApplyClient or EdgeCutClient
+        client,  # SamplerBackend, GatherApplyClient or EdgeCutClient
         g,
         fanouts,
         train_ids: np.ndarray,
         batch_size: int = 256,
         opt: AdamWConfig | None = None,
-        direction: str = "out",
+        direction: str = DEFAULT_DIRECTION,
         seed: int = 0,
+        weighted: bool = False,
+        prefetch: int = 0,
+        worker_cores: tuple | None = None,
+        partition_of: np.ndarray | None = None,
+        balance_partitions: bool = False,
     ):
         self.model = model
         self.client = client
         self.g = g
         self.fanouts = fanouts
-        self.loader = SeedBatchLoader(train_ids, batch_size, seed)
-        self.opt_cfg = opt or AdamWConfig(lr=1e-3, weight_decay=1e-4)
         self.direction = direction
+        self.pipeline = BatchPipeline(
+            client,
+            g,
+            train_ids,
+            fanouts,
+            model.num_layers,
+            batch_size=batch_size,
+            weighted=weighted,
+            direction=direction,
+            prefetch=prefetch,
+            worker_cores=worker_cores,
+            seed=seed,
+            partition_of=partition_of,
+            balance_partitions=balance_partitions,
+        )
+        self.loader = self.pipeline.loader
+        self.opt_cfg = opt or AdamWConfig(lr=1e-3, weight_decay=1e-4)
         self.params = model.init(jax.random.PRNGKey(seed))
         self.opt_state = adamw_init(self.params)
         self.log = TrainLog()
@@ -76,30 +99,32 @@ class GNNTrainer:
         self._acc = jax.jit(acc_fn)
 
     def make_batch(self, seeds):
-        sub = self.client.sample_khop(seeds, self.fanouts, direction=self.direction)
-        return subgraph_to_batch(
-            sub, self.g.vertex_feats, self.g.labels, self.model.num_layers
-        )
+        return self.pipeline.make_batch(seeds)
 
-    def train(self, epochs: int = 1, log_every: int = 10):
+    def train(
+        self,
+        epochs: int = 1,
+        log_every: int = 10,
+        max_steps: int | None = None,
+    ):
         step = 0
-        for _ in range(epochs):
-            for seeds in self.loader.epoch():
-                t0 = time.perf_counter()
-                batch = self.make_batch(seeds)
-                t1 = time.perf_counter()
-                batch_j = jax.tree.map(jnp.asarray, batch)
-                self.params, self.opt_state, loss = self._step(
-                    self.params, self.opt_state, batch_j
-                )
-                loss = float(loss)
-                t2 = time.perf_counter()
-                self.log.sample_time += t1 - t0
-                self.log.compute_time += t2 - t1
-                if step % log_every == 0:
-                    self.log.steps.append(step)
-                    self.log.losses.append(loss)
-                step += 1
+        for seeds, batch in self.pipeline.batches(epochs):
+            if max_steps is not None and step >= max_steps:
+                break
+            t1 = time.perf_counter()
+            self.params, self.opt_state, loss = self._step(
+                self.params, self.opt_state, batch
+            )
+            loss = float(loss)
+            t2 = time.perf_counter()
+            self.log.compute_time += t2 - t1
+            if step % log_every == 0:
+                self.log.steps.append(step)
+                self.log.losses.append(loss)
+            step += 1
+        # producer-side host clock: equals the old serial sample_time when
+        # prefetch=0; with prefetch it is the OVERLAPPED sampling time
+        self.log.sample_time = self.pipeline.sample_time
         return self.log
 
     def evaluate(self, test_ids: np.ndarray, batches: int = 8) -> float:

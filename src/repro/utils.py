@@ -2,6 +2,8 @@
 from __future__ import annotations
 
 import json
+import queue
+import threading
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
@@ -18,7 +20,68 @@ __all__ = [
     "round_up",
     "stable_hash64",
     "json_dump",
+    "prefetch_iterator",
 ]
+
+
+def prefetch_iterator(it, depth: int):
+    """Drain ``it`` on a background thread into a bounded queue of ``depth``
+    items, yielding them in order (double-buffered host/device overlap when
+    ``depth >= 2``).  The single producer preserves the source order, so the
+    stream is bit-identical to iterating ``it`` directly.  ``depth <= 0``
+    yields from ``it`` unchanged.  Producer exceptions re-raise at the
+    consumer.  Closing/abandoning the generator early signals the producer
+    to stop at its next item and unblocks it, so no thread or queued work is
+    pinned for the process lifetime (note: items the source already produced
+    ahead are discarded, and the source iterator is left mid-iteration)."""
+    if depth <= 0:
+        yield from it
+        return
+    q: queue.Queue = queue.Queue(maxsize=depth)
+    stop = threading.Event()
+    _END, _ERR = object(), object()
+
+    def _safe_put(obj) -> bool:
+        """Bounded-wait put that gives up once the consumer signals stop
+        (a plain q.put could block forever against a full queue after the
+        consumer is gone — e.g. the depth=1 end-sentinel)."""
+        while not stop.is_set():
+            try:
+                q.put(obj, timeout=0.1)
+                return True
+            except queue.Full:
+                continue
+        return False
+
+    def _produce():
+        try:
+            for item in it:
+                if not _safe_put(item):
+                    return
+        except BaseException as exc:  # noqa: BLE001 - re-raised at consumer
+            _safe_put((_ERR, exc))
+            return
+        _safe_put(_END)
+
+    t = threading.Thread(target=_produce, daemon=True, name="glisp-prefetch")
+    t.start()
+    try:
+        while True:
+            item = q.get()
+            if item is _END:
+                break
+            if isinstance(item, tuple) and len(item) == 2 and item[0] is _ERR:
+                raise item[1]
+            yield item
+        t.join()
+    finally:
+        stop.set()
+        while True:  # unblock a producer waiting on the full queue
+            try:
+                q.get_nowait()
+            except queue.Empty:
+                break
+        t.join(timeout=5)
 
 
 @dataclass

@@ -1,0 +1,80 @@
+"""Minimal stand-in for ``hypothesis`` so tier-1 collection never breaks.
+
+Covers exactly the surface the test suite uses — ``@given`` with keyword
+strategies, ``@settings(max_examples=..., deadline=...)`` and
+``strategies.integers/floats/booleans`` — by running each property test over
+``max_examples`` deterministic pseudo-random draws (seeded from the test
+name, so failures reproduce).  Install the real package from
+requirements-dev.txt for actual shrinking/coverage; this shim only keeps the
+suite runnable in minimal environments.
+"""
+from __future__ import annotations
+
+import functools
+import inspect
+import zlib
+
+import numpy as np
+
+__all__ = ["given", "settings", "strategies"]
+
+_DEFAULT_MAX_EXAMPLES = 10
+
+
+class _Strategy:
+    def __init__(self, draw):
+        self._draw = draw
+
+    def sample(self, rng: np.random.Generator):
+        return self._draw(rng)
+
+
+class strategies:  # noqa: N801 - mirrors the hypothesis module name
+    @staticmethod
+    def integers(min_value: int, max_value: int) -> _Strategy:
+        return _Strategy(lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+    @staticmethod
+    def floats(min_value: float = 0.0, max_value: float = 1.0) -> _Strategy:
+        return _Strategy(
+            lambda rng: float(rng.uniform(min_value, max_value))
+        )
+
+    @staticmethod
+    def booleans() -> _Strategy:
+        return _Strategy(lambda rng: bool(rng.integers(0, 2)))
+
+
+def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
+    def deco(fn):
+        fn._max_examples = max_examples
+        return fn
+
+    return deco
+
+
+def given(**strats):
+    def deco(fn):
+        @functools.wraps(fn)
+        def wrapper(*args, **kwargs):
+            # @settings may be applied above @given: it then annotates this
+            # wrapper, so read the attribute off the wrapper at call time
+            n = getattr(wrapper, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+            rng = np.random.default_rng(
+                zlib.crc32(fn.__qualname__.encode("utf-8"))
+            )
+            for _ in range(n):
+                drawn = {k: s.sample(rng) for k, s in strats.items()}
+                fn(*args, **drawn, **kwargs)
+
+        wrapper._max_examples = getattr(
+            fn, "_max_examples", _DEFAULT_MAX_EXAMPLES
+        )
+        # pytest must not see the strategy-supplied params as fixtures
+        sig = inspect.signature(fn)
+        remaining = [p for name, p in sig.parameters.items() if name not in strats]
+        wrapper.__signature__ = sig.replace(parameters=remaining)
+        del wrapper.__wrapped__  # stop inspect from following to fn
+        return wrapper
+
+    return deco

@@ -1,0 +1,290 @@
+"""The unified system facade: registries, config validation, build round-trip,
+prefetching pipeline determinism, backend protocol parity, eid threading."""
+import inspect
+
+import numpy as np
+import pytest
+
+from repro.api import (
+    CACHE_POLICIES,
+    PARTITIONERS,
+    REORDERS,
+    SAMPLERS,
+    DEFAULT_DIRECTION,
+    BatchPipeline,
+    GLISPConfig,
+    GLISPSystem,
+    Registry,
+    SamplerBackend,
+)
+from repro.core.sampling.service import MAX_PARTS
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+
+def test_registry_unknown_name_lists_known():
+    reg = Registry("widget")
+    reg.register("a", 1)
+    reg.register("b", 2)
+    with pytest.raises(ValueError, match="unknown widget 'c'.*a, b"):
+        reg.get("c")
+
+
+def test_registry_duplicate_and_case_insensitive():
+    reg = Registry("widget")
+    reg.register("Foo", 1)
+    assert reg.get("foo") == 1
+    assert reg.get("FOO") == 1
+    with pytest.raises(ValueError, match="already registered"):
+        reg.register("foo", 2)
+
+
+def test_builtin_registries_populated():
+    assert {"adadne", "dne", "hash2d", "random", "ldg"} <= set(PARTITIONERS.names())
+    assert {"gather_apply", "edge_cut"} <= set(SAMPLERS.names())
+    assert "pds" in REORDERS and REORDERS.get("pds") == "PDS"
+    assert {"fifo", "lru"} <= set(CACHE_POLICIES.names())
+
+
+def test_config_validation_errors(small_graph):
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        GLISPConfig(partitioner="metis").validate()
+    with pytest.raises(ValueError, match="unknown sampler backend"):
+        GLISPConfig(sampler="rpc").validate()
+    with pytest.raises(ValueError, match="direction"):
+        GLISPConfig(direction="sideways").validate()
+    with pytest.raises(ValueError, match="num_parts"):
+        GLISPConfig(num_parts=MAX_PARTS + 1).validate()
+    with pytest.raises(ValueError, match="fanouts"):
+        GLISPConfig(fanouts=(10, 0)).validate()
+    with pytest.raises(ValueError, match="unknown partitioner"):
+        GLISPSystem.build(small_graph, GLISPConfig(partitioner="metis"))
+
+
+# ---------------------------------------------------------------------------
+# facade round-trip
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def api_graph():
+    from repro.graph import power_law_graph
+
+    g = power_law_graph(1200, avg_degree=8, seed=11, feat_dim=16, num_classes=4)
+    g.labels = g.vertex_types.astype(np.int32)
+    return g
+
+
+@pytest.fixture(scope="module")
+def glisp_system(api_graph):
+    return GLISPSystem.build(
+        api_graph, GLISPConfig(num_parts=4, fanouts=(8, 4), batch_size=128)
+    )
+
+
+def test_build_roundtrip(api_graph, glisp_system):
+    s = glisp_system
+    assert len(s.partitions) == 4
+    assert sum(p.num_edges for p in s.partitions) == api_graph.num_edges
+    assert isinstance(s.backend, SamplerBackend)
+    m = s.partition_metrics()
+    assert m["RF"] >= 1.0 and m["EB"] >= 1.0
+    # full-fanout sample through the facade is lossless (Gather-Apply merge)
+    seeds = np.arange(20)
+    sub = s.sample(seeds, fanouts=[10**9])
+    hop = sub.hops[0]
+    for v in seeds:
+        got = sorted(hop.dst[hop.src == v].tolist())
+        want = sorted(api_graph.neighbors(int(v), "out").tolist())
+        assert got == want
+
+
+def test_facade_train_smoke(api_graph, glisp_system):
+    from repro.models.gnn import GNNModel
+    from repro.train.optim import AdamWConfig
+
+    g = api_graph
+    g.vertex_feats[:, :3] = 0
+    g.vertex_feats[np.arange(g.num_vertices), g.labels] += 2.0
+    model = GNNModel("sage", 16, hidden=32, num_layers=2, num_classes=3)
+    tr = glisp_system.train(
+        model,
+        np.arange(900),
+        epochs=1,
+        opt=AdamWConfig(lr=3e-3, warmup_steps=2, total_steps=50),
+    )
+    assert len(tr.log.losses) > 0
+    assert np.isfinite(tr.log.losses).all()
+
+
+def test_backend_reset_stats_clears_work(glisp_system):
+    glisp_system.sample(np.arange(50))
+    assert glisp_system.client.total_work > 0
+    glisp_system.reset_stats()
+    assert glisp_system.client.total_work == 0.0
+    assert glisp_system.client.parallel_work == 0.0
+    assert glisp_system.server_workloads().sum() == 0
+
+
+# ---------------------------------------------------------------------------
+# prefetching pipeline
+# ---------------------------------------------------------------------------
+
+
+def _collect(pipeline, epochs=2):
+    out = []
+    for seeds, batch in pipeline.batches(epochs):
+        out.append((seeds, batch))
+    return out
+
+
+def test_prefetch_loader_determinism(api_graph):
+    # two identically-seeded systems: server/client RNG streams must match,
+    # so each gets its own backend (they are stateful across draws)
+    cfg = GLISPConfig(num_parts=4, fanouts=(8, 4), batch_size=128)
+    ids = np.arange(1000)
+    serial = GLISPSystem.build(api_graph, cfg).loader(
+        ids, num_layers=2, prefetch=0, seed=5
+    )
+    prefetched = GLISPSystem.build(api_graph, cfg).loader(
+        ids, num_layers=2, prefetch=3, seed=5
+    )
+    bs = _collect(serial)
+    bp = _collect(prefetched)
+    assert len(bs) == len(bp) > 0
+    for (seeds_s, batch_s), (seeds_p, batch_p) in zip(bs, bp):
+        np.testing.assert_array_equal(seeds_s, seeds_p)
+        np.testing.assert_array_equal(batch_s.feats, batch_p.feats)
+        np.testing.assert_array_equal(batch_s.labels, batch_p.labels)
+        for k in range(2):
+            np.testing.assert_array_equal(batch_s.layer_dst[k], batch_p.layer_dst[k])
+            np.testing.assert_array_equal(batch_s.layer_src[k], batch_p.layer_src[k])
+            np.testing.assert_array_equal(batch_s.layer_etype[k], batch_p.layer_etype[k])
+
+
+def test_prefetch_propagates_producer_errors(api_graph, glisp_system):
+    pl = glisp_system.loader(np.arange(500), num_layers=2, prefetch=2)
+
+    def boom(seeds):
+        raise RuntimeError("producer failed")
+
+    pl.make_batch = boom
+    with pytest.raises(RuntimeError, match="producer failed"):
+        list(pl.batches(1))
+
+
+# ---------------------------------------------------------------------------
+# backend protocol parity
+# ---------------------------------------------------------------------------
+
+
+def test_gather_apply_edge_cut_parity(api_graph):
+    """Both backends answer the SAME protocol call with the SAME default
+    direction, and at full fanout return identical one-hop edge sets."""
+    g = api_graph
+    ga = GLISPSystem.build(g, GLISPConfig(num_parts=3, fanouts=(8,)))
+    ec = GLISPSystem.build(
+        g,
+        GLISPConfig(num_parts=3, partitioner="ldg", sampler="edge_cut", fanouts=(8,)),
+    )
+    seeds = np.arange(40)
+    for system in (ga, ec):
+        sub = system.sample(seeds, fanouts=[10**9])  # config default direction
+        hop = sub.hops[0]
+        edges = set(zip(hop.src.tolist(), hop.dst.tolist()))
+        want = {
+            (int(v), int(n))
+            for v in seeds
+            for n in g.neighbors(int(v), DEFAULT_DIRECTION)
+        }
+        assert edges == want, system.config.sampler
+    # the unified default is carried by both raw client signatures too
+    from repro.core.sampling import EdgeCutClient, GatherApplyClient
+
+    for cls in (GatherApplyClient, EdgeCutClient):
+        sig = inspect.signature(cls.sample_khop)
+        assert sig.parameters["direction"].default == DEFAULT_DIRECTION, cls
+
+
+def test_fanout_respected_via_protocol(api_graph):
+    ec = GLISPSystem.build(
+        api_graph,
+        GLISPConfig(num_parts=3, partitioner="ldg", sampler="edge_cut"),
+    )
+    sub = ec.sample(np.arange(100), fanouts=[5, 3])
+    for f, hop in zip([5, 3], sub.hops):
+        if hop.src.shape[0]:
+            _, counts = np.unique(hop.src, return_counts=True)
+            assert counts.max() <= f
+
+
+# ---------------------------------------------------------------------------
+# num_parts > 64 guard
+# ---------------------------------------------------------------------------
+
+
+def test_vertex_router_rejects_too_many_parts():
+    from repro.core.sampling import VertexRouter
+    from repro.graph import power_law_graph
+
+    g = power_law_graph(200, avg_degree=4, seed=0)
+    ep = np.zeros(g.num_edges, dtype=np.int64)
+    with pytest.raises(ValueError, match="at most 64"):
+        VertexRouter(g, ep, MAX_PARTS + 1)
+    # boundary: exactly 64 is fine
+    VertexRouter(g, ep, MAX_PARTS)
+
+
+def test_assign_inference_owners_rejects_too_many_parts():
+    from repro.core.inference import assign_inference_owners
+
+    mask = np.ones(16, dtype=np.uint64)
+    with pytest.raises(ValueError, match="at most 64"):
+        assign_inference_owners(mask, MAX_PARTS + 1)
+
+
+# ---------------------------------------------------------------------------
+# edge ids carried through Gather/Apply
+# ---------------------------------------------------------------------------
+
+
+def test_eids_survive_apply(api_graph, glisp_system):
+    g = api_graph
+    for weighted in (False, True):
+        sub = glisp_system.sample(np.arange(64), fanouts=[6, 4], weighted=weighted)
+        for hop in sub.hops:
+            assert hop.eid is not None
+            assert hop.eid.shape == hop.src.shape
+            # each carried id names the exact sampled edge in the global graph
+            np.testing.assert_array_equal(g.src[hop.eid], hop.src)
+            np.testing.assert_array_equal(g.dst[hop.eid], hop.dst)
+
+
+def test_experiment_config_bridge():
+    from repro.configs.gnn import get_gnn_config
+
+    cfg = get_gnn_config("sage-products").to_glisp_config(num_parts=2)
+    assert cfg.partitioner == "adadne"
+    assert cfg.sampler == "gather_apply"
+    assert cfg.fanouts == (15, 10, 5)
+    assert cfg.num_parts == 2
+    cfg.validate()
+
+
+def test_batch_edge_types_from_eids(api_graph, glisp_system):
+    from repro.models.gnn.batching import subgraph_to_batch
+
+    g = api_graph
+    sub = glisp_system.sample(np.arange(64), fanouts=[6, 4])
+    batch = subgraph_to_batch(
+        sub, g.vertex_feats, g.labels, num_layers=2, edge_types=g.edge_types
+    )
+    # layer K-1 aggregates hop 0 only; check its etypes match the global table
+    hop = sub.hops[0]
+    n = hop.src.shape[0]
+    np.testing.assert_array_equal(
+        batch.layer_etype[1][:n], g.edge_types[hop.eid].astype(np.int32)
+    )

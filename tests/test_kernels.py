@@ -4,7 +4,10 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # minimal envs: deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.kernels.flash_attention import flash_attention_pallas
 from repro.kernels.ref import attention_ref, segment_spmm_ref, ssd_scan_ref

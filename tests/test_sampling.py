@@ -2,7 +2,10 @@
 load-balance accounting."""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # minimal envs: deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 from scipy.stats import chisquare
 
 from repro.core.sampling import EdgeCutClient, SamplingServer
@@ -145,7 +148,10 @@ def test_glisp_balances_better_than_edge_cut(small_graph):
         [SamplingServer(p, seed=0) for p in parts], VertexRouter(g, ep, P), seed=0
     )
     vp = ldg_edge_cut(g, P, seed=1)
-    ec_parts = build_partitions(g, edge_cut_to_edge_assignment(g, vp), P)
+    # strict DistDGL layout: in-edges local to the owner, sampled with "in"
+    ec_parts = build_partitions(
+        g, edge_cut_to_edge_assignment(g, vp, local_direction="in"), P
+    )
     ec = EdgeCutClient(
         [SamplingServer(p, seed=0) for p in ec_parts], vp.astype(np.int64), seed=0
     )
