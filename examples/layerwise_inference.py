@@ -44,6 +44,9 @@ cost = IOCost()
 print("reorder | chunk reads | dyn hit | modeled speedup vs raw DFS")
 for alg in ("NS", "DS", "PS", "PDS"):
     with tempfile.TemporaryDirectory() as td:
+        # numpy layer fns run through the vectorized gather without jit;
+        # GNNModel.embed_layer_fn slices would additionally get the
+        # shape-bucketed device-resident path (mode/jit/use_kernel knobs)
         res = system.infer_layerwise(
             layers, td, chunk_rows=512, out_dims=[32, 32],
             reorder=alg, batch_size=512,

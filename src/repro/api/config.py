@@ -44,6 +44,15 @@ class GLISPConfig:
     dynamic_frac: float = 0.10
     chunk_rows: int = 4096
     infer_batch_size: int = 4096
+    infer_mode: str = "bucketed"  # bucketed (device-resident jit) | reference
+    infer_jit: bool = True  # jit layer slices exposing a traceable .jax
+    # None = respect each layer fn's own default; True/False force the
+    # Pallas segment-SpMM kernel path on/off inside the jit'd slices
+    infer_use_kernel: bool | None = None
+    # explicit edge-padding buckets (ascending); () = powers of two.  A
+    # batch with more edges than the last bucket falls back to
+    # power-of-two padding (extra compile) rather than failing
+    infer_edge_buckets: tuple = ()
 
     seed: int = 0
 
@@ -79,6 +88,17 @@ class GLISPConfig:
             raise ValueError(f"prefetch must be >= 0, got {self.prefetch}")
         if not 0.0 <= self.dynamic_frac <= 1.0:
             raise ValueError(f"dynamic_frac must be in [0, 1], got {self.dynamic_frac}")
+        if self.infer_mode not in ("bucketed", "reference"):
+            raise ValueError(
+                f"infer_mode must be 'bucketed' or 'reference', got {self.infer_mode!r}"
+            )
+        if any(b <= 0 for b in self.infer_edge_buckets) or list(
+            self.infer_edge_buckets
+        ) != sorted(self.infer_edge_buckets):
+            raise ValueError(
+                "infer_edge_buckets must be positive and ascending, got "
+                f"{self.infer_edge_buckets!r}"
+            )
         return self
 
     def replace(self, **kw) -> "GLISPConfig":
@@ -87,4 +107,5 @@ class GLISPConfig:
     def to_dict(self) -> dict:
         d = dataclasses.asdict(self)
         d["fanouts"] = list(self.fanouts)
+        d["infer_edge_buckets"] = list(self.infer_edge_buckets)
         return d

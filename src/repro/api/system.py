@@ -216,8 +216,16 @@ class GLISPSystem:
         chunk_rows: int | None = None,
         dynamic_frac: float | None = None,
         batch_size: int | None = None,
+        mode: str | None = None,
+        jit: bool | None = None,
+        use_kernel: bool | None = None,
+        edge_buckets: tuple | None = None,
     ):
-        """Run the redundancy-free layerwise engine over the whole graph."""
+        """Run the redundancy-free layerwise engine over the whole graph.
+
+        ``mode``/``jit``/``use_kernel``/``edge_buckets`` control the
+        device-resident bucketed execution path (see ``GLISPConfig``'s
+        ``infer_*`` fields for the defaults)."""
         from repro.core.inference.engine import LayerwiseInferenceEngine
 
         if not isinstance(self.backend, GatherApplyBackend):
@@ -250,5 +258,15 @@ class GLISPSystem:
             direction=cfg.direction,
             out_dims=out_dims,
             seed=cfg.seed,
+            mode=mode if mode is not None else cfg.infer_mode,
+            use_jit=jit if jit is not None else cfg.infer_jit,
+            use_kernel=(
+                use_kernel if use_kernel is not None else cfg.infer_use_kernel
+            ),
+            edge_buckets=(
+                tuple(edge_buckets)
+                if edge_buckets is not None
+                else cfg.infer_edge_buckets
+            ),
         )
         return engine.run()

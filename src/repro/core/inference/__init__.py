@@ -4,6 +4,7 @@ from repro.core.inference.engine import (
     LayerwiseInferenceEngine,
     samplewise_inference,
     assign_inference_owners,
+    csr_gather,
 )
 
 __all__ = [
@@ -14,4 +15,5 @@ __all__ = [
     "LayerwiseInferenceEngine",
     "samplewise_inference",
     "assign_inference_owners",
+    "csr_gather",
 ]

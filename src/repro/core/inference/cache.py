@@ -23,7 +23,7 @@ from enum import Enum
 
 import numpy as np
 
-from repro.core.inference.store import ChunkedEmbeddingStore, IOCost
+from repro.core.inference.store import ChunkedEmbeddingStore, IOCost, chunk_runs
 
 __all__ = ["CachePolicy", "TwoLevelCache"]
 
@@ -103,12 +103,13 @@ class TwoLevelCache:
         return block
 
     def read_rows(self, rows: np.ndarray) -> np.ndarray:
+        """Gather rows, grouped by chunk via one argsort (no O(rows) boolean
+        mask scan per chunk); one ``_get_chunk`` per distinct chunk, so the
+        cache accounting is identical to the scalar path."""
         rows = np.asarray(rows, dtype=np.int64)
         out = np.empty((rows.shape[0], self.store.dim), dtype=self.store.dtype)
-        chunk_ids = rows // self.store.chunk_rows
-        for c in np.unique(chunk_ids):
-            block = self._get_chunk(int(c))
-            sel = chunk_ids == c
-            out[sel] = block[rows[sel] - int(c) * self.store.chunk_rows]
+        for c, pos, crows in chunk_runs(rows, self.store.chunk_rows):
+            block = self._get_chunk(c)
+            out[pos] = block[crows - c * self.store.chunk_rows]
         self.stats.rows_served += rows.shape[0]
         return out

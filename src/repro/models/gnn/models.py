@@ -27,18 +27,18 @@ def _seg_sum(msg, seg, n, use_kernel):
     return segment_spmm_ref(msg, seg, n)
 
 
-def _seg_count(seg, n):
+def _seg_count(seg, n, use_kernel=False):
     ones = (seg >= 0).astype(jnp.float32)[:, None]
-    return segment_spmm_ref(ones, seg, n)  # [n,1]
+    return _seg_sum(ones, seg, n, use_kernel)  # [n,1]
 
 
-def _seg_softmax(logits, seg, n):
+def _seg_softmax(logits, seg, n, use_kernel=False):
     """Softmax over edges grouped by seg (padding seg=-1 excluded)."""
     neg = jnp.where(seg >= 0, logits, -jnp.inf)
     mx = jax.ops.segment_max(neg, jnp.maximum(seg, 0), num_segments=n)
     mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
     e = jnp.where(seg >= 0, jnp.exp(logits - mx[jnp.maximum(seg, 0)]), 0.0)
-    z = segment_spmm_ref(e[:, None], seg, n)[:, 0]
+    z = _seg_sum(e[:, None], seg, n, use_kernel)[:, 0]
     return e / jnp.maximum(z[jnp.maximum(seg, 0)], 1e-9)
 
 
@@ -113,16 +113,15 @@ class GNNModel:
         hs = jnp.where(ok[:, None], h[jnp.maximum(src, 0)], 0.0)
         if self.kind == "gcn":
             agg = _seg_sum(hs, dst, n, self.use_kernel)
-            cnt = _seg_count(dst, n) + 1.0
+            cnt = _seg_count(dst, n, self.use_kernel) + 1.0
             return jax.nn.relu(((agg + h) / cnt) @ p["w"] + p["b"])
         if self.kind == "sage":
             agg = _seg_sum(hs, dst, n, self.use_kernel)
-            cnt = jnp.maximum(_seg_count(dst, n), 1.0)
+            cnt = jnp.maximum(_seg_count(dst, n, self.use_kernel), 1.0)
             return jax.nn.relu(
                 jnp.concatenate([h, agg / cnt], axis=1) @ p["w"] + p["b"]
             )
         if self.kind == "gat":
-            hh = p["w"].shape[1] // p["a_dst"].shape[1]  # heads... recompute
             heads, dh = p["a_dst"].shape
             z = (h @ p["w"]).reshape(n, heads, dh)
             zsrc = jnp.where(ok[:, None, None], z[jnp.maximum(src, 0)], 0.0)
@@ -132,7 +131,7 @@ class GNNModel:
             )  # [E, H]
             out = []
             for hd in range(heads):  # few heads; keeps segment ops 2-D
-                alpha = _seg_softmax(e[:, hd], dst, n)
+                alpha = _seg_softmax(e[:, hd], dst, n, self.use_kernel)
                 out.append(
                     _seg_sum(zsrc[:, hd] * alpha[:, None], dst, n, self.use_kernel)
                 )
@@ -153,7 +152,7 @@ class GNNModel:
             att = (qd * ke).sum(-1) / (dout**0.5)  # [E, H]
             out = []
             for hd in range(heads):
-                alpha = _seg_softmax(att[:, hd], dst, n)
+                alpha = _seg_softmax(att[:, hd], dst, n, self.use_kernel)
                 msg = jnp.where(ok[:, None], ve[:, hd] * alpha[:, None], 0.0)
                 out.append(_seg_sum(msg, dst, n, self.use_kernel))
             agg = jnp.concatenate(out, axis=1) @ p["wo"]
@@ -182,30 +181,88 @@ class GNNModel:
         tgt = jnp.take_along_axis(logits, batch.labels[:, None], axis=-1)[:, 0]
         return (logz - tgt).mean()
 
-    def embed_layer_fn(self, params: Params, k: int):
+    def embed_layer_fn(self, params: Params, k: int, *, use_kernel: bool | None = None):
         """Adapter for the layerwise inference engine: one slice of the model
-        as (k, h_self, h_nbr, seg) -> h_new (numpy in/out)."""
+        as (k, h_self, h_nbr, seg[, etype]) -> h_new (numpy in/out).
 
-        def fn(_k, h_self, h_nbr, seg):
+        The returned callable carries two engine-facing attributes:
+
+        * ``fn.jax(h_self, h_nbr, seg, etype, *, use_kernel=...)`` — the pure
+          traceable slice on jnp arrays with ``seg == -1`` padding, which the
+          bucketed engine wraps in ``jax.jit`` so each (layer, shape-bucket)
+          pair compiles once and stays device-resident.
+        * ``fn.needs_etype`` — True for hgt, whose per-edge relation
+          projections need the sampled edges' type ids.
+
+        Covers all four evaluated kinds (gcn/sage/gat/hgt); aggregation goes
+        through :func:`repro.kernels.ops.gnn_aggregate` when ``use_kernel``
+        (defaulting to the model's flag) is set."""
+        p = params["layers"][k]
+        kind = self.kind
+        heads = self.num_heads
+        default_kernel = self.use_kernel if use_kernel is None else use_kernel
+
+        def jax_fn(h_self, h_nbr, seg, etype, *, use_kernel=default_kernel):
             n = h_self.shape[0]
-            m = h_nbr.shape[0]
-            dst = jnp.asarray(seg, jnp.int32) if m else jnp.zeros(0, jnp.int32)
-            src_feats = jnp.asarray(h_nbr)
-            # emulate the batch-layer API with a direct (self, gathered) pair
-            h = jnp.asarray(h_self)
-            p = params["layers"][k]
-            if self.kind == "gcn":
-                agg = segment_spmm_ref(src_feats, dst, n)
-                cnt = segment_spmm_ref(jnp.ones((m, 1)), dst, n) + 1.0
-                return jax.device_get(jax.nn.relu(((agg + h) / cnt) @ p["w"] + p["b"]))
-            if self.kind == "sage":
-                agg = segment_spmm_ref(src_feats, dst, n)
-                cnt = jnp.maximum(segment_spmm_ref(jnp.ones((m, 1)), dst, n), 1.0)
-                return jax.device_get(
-                    jax.nn.relu(jnp.concatenate([h, agg / cnt], axis=1) @ p["w"] + p["b"])
+            seg = seg.astype(jnp.int32)
+            ok = seg >= 0
+            if kind == "gcn":
+                agg = _seg_sum(h_nbr, seg, n, use_kernel)
+                cnt = _seg_count(seg, n, use_kernel) + 1.0
+                return jax.nn.relu(((agg + h_self) / cnt) @ p["w"] + p["b"])
+            if kind == "sage":
+                agg = _seg_sum(h_nbr, seg, n, use_kernel)
+                cnt = jnp.maximum(_seg_count(seg, n, use_kernel), 1.0)
+                return jax.nn.relu(
+                    jnp.concatenate([h_self, agg / cnt], axis=1) @ p["w"] + p["b"]
                 )
-            raise NotImplementedError(
-                "layerwise adapter implemented for gcn/sage (engine demos)"
+            if kind == "gat":
+                hh, dh = p["a_dst"].shape
+                z = (h_self @ p["w"]).reshape(n, hh, dh)
+                zsrc = (h_nbr @ p["w"]).reshape(-1, hh, dh)
+                zsrc = jnp.where(ok[:, None, None], zsrc, 0.0)
+                zdst = z[jnp.maximum(seg, 0)]
+                e = jax.nn.leaky_relu(
+                    (zdst * p["a_dst"]).sum(-1) + (zsrc * p["a_src"]).sum(-1), 0.2
+                )  # [E, H]
+                out = []
+                for hd in range(hh):
+                    alpha = _seg_softmax(e[:, hd], seg, n, use_kernel)
+                    out.append(
+                        _seg_sum(zsrc[:, hd] * alpha[:, None], seg, n, use_kernel)
+                    )
+                return jax.nn.elu(jnp.concatenate(out, axis=1))
+            if kind == "hgt":
+                dout = p["wo"].shape[0] // heads
+                q = (h_self @ p["wq"]).reshape(n, heads, dout)
+                et = jnp.maximum(etype.astype(jnp.int32), 0)
+                wk = p["wk"][et]  # [E, din, h*dh]
+                wv = p["wv"][et]
+                ke = jnp.einsum("ed,edf->ef", h_nbr, wk).reshape(-1, heads, dout)
+                ve = jnp.einsum("ed,edf->ef", h_nbr, wv).reshape(-1, heads, dout)
+                qd = q[jnp.maximum(seg, 0)]
+                att = (qd * ke).sum(-1) / (dout**0.5)  # [E, H]
+                out = []
+                for hd in range(heads):
+                    alpha = _seg_softmax(att[:, hd], seg, n, use_kernel)
+                    msg = jnp.where(ok[:, None], ve[:, hd] * alpha[:, None], 0.0)
+                    out.append(_seg_sum(msg, seg, n, use_kernel))
+                agg = jnp.concatenate(out, axis=1) @ p["wo"]
+                return jax.nn.gelu(agg + h_self @ p["wskip"])
+            raise ValueError(kind)
+
+        def fn(_k, h_self, h_nbr, seg, etype=None):
+            m = h_nbr.shape[0]
+            sg = jnp.asarray(seg, jnp.int32) if m else jnp.zeros(0, jnp.int32)
+            et = (
+                jnp.asarray(etype, jnp.int32)
+                if etype is not None and m
+                else jnp.zeros(m, jnp.int32)
+            )
+            return jax.device_get(
+                jax_fn(jnp.asarray(h_self), jnp.asarray(h_nbr), sg, et)
             )
 
+        fn.jax = jax_fn
+        fn.needs_etype = kind == "hgt"
         return fn

@@ -1,13 +1,19 @@
 """Layerwise inference engine: equivalence with samplewise, cache semantics,
-reorder effect on chunk reads."""
+reorder effect on chunk reads, bucketed-vs-reference engine equivalence, and
+the CSR-offset gather property."""
 import numpy as np
 import pytest
+try:
+    from hypothesis import given, settings, strategies as st
+except ModuleNotFoundError:  # minimal envs: deterministic fallback shim
+    from _hypothesis_shim import given, settings, strategies as st
 
 from repro.core.inference import (
     ChunkedEmbeddingStore,
     LayerwiseInferenceEngine,
     TwoLevelCache,
     assign_inference_owners,
+    csr_gather,
     samplewise_inference,
 )
 from repro.core.inference.cache import CachePolicy
@@ -112,6 +118,72 @@ def test_fifo_eviction(tmp_path):
     st0 = cache.stats.static_reads
     cache.read_rows(np.arange(0, 32))     # chunk 0 again -> miss
     assert cache.stats.static_reads == st0 + 1
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=st.integers(0, 40), seed=st.integers(0, 10_000))
+def test_csr_gather_matches_naive(n, seed):
+    """Property: the vectorized CSR-offset gather equals the naive
+    per-segment slice-and-concatenate gather."""
+    rng = np.random.default_rng(seed)
+    values = rng.integers(0, 1000, size=500)
+    starts = np.sort(rng.integers(0, 400, size=n))
+    ends = np.minimum(starts + rng.integers(0, 20, size=n), values.shape[0])
+    counts = ends - starts
+    got = csr_gather(values, starts, counts)
+    want = (
+        np.concatenate([values[a:b] for a, b in zip(starts, ends)])
+        if n
+        else values[:0]
+    )
+    np.testing.assert_array_equal(got, want)
+
+
+@pytest.mark.parametrize("kind", ["gcn", "sage", "gat", "hgt"])
+def test_bucketed_engine_matches_reference(
+    kind, small_graph, sampling_client, tmp_path
+):
+    """The device-resident shape-bucketed jit engine produces the same
+    embeddings as the pre-optimization reference engine for every evaluated
+    model kind (full fanout makes sampling deterministic across runs)."""
+    import jax
+
+    from repro.models.gnn import GNNModel
+
+    model = GNNModel(kind, 16, hidden=16, num_layers=2, num_heads=2)
+    params = model.init(jax.random.PRNGKey(0))
+    fns = [model.embed_layer_fn(params, k) for k in range(2)]
+    BIG = 10**9
+    kw = dict(fanouts=[BIG, BIG], chunk_rows=128, out_dims=[16, 16])
+    ref = LayerwiseInferenceEngine(
+        small_graph, sampling_client, fns, small_graph.vertex_feats,
+        str(tmp_path / "ref"), mode="reference", **kw,
+    ).run()
+    new = LayerwiseInferenceEngine(
+        small_graph, sampling_client, fns, small_graph.vertex_feats,
+        str(tmp_path / "new"), mode="bucketed", batch_size=512, **kw,
+    ).run()
+    ids = np.arange(small_graph.num_vertices)
+    a = ref.final_store.read_rows_direct(ref.newid[ids])
+    b = new.final_store.read_rows_direct(new.newid[ids])
+    np.testing.assert_allclose(a, b, rtol=1e-4, atol=1e-5)
+    assert new.slice_compiles > 0  # the jit path actually ran
+
+
+def test_full_chunk_write_skips_read_modify_write(tmp_path):
+    """A write covering every row of a chunk stores the values directly;
+    partial writes still preserve the untouched rows."""
+    store = ChunkedEmbeddingStore(str(tmp_path / "s"), 100, 4, chunk_rows=32)
+    rng = np.random.default_rng(0)
+    vals = rng.standard_normal((100, 4)).astype(np.float32)
+    store.write_rows(np.arange(100), vals)  # full chunks incl. ragged last
+    np.testing.assert_array_equal(store.read_rows_direct(np.arange(100)), vals)
+    patch = np.full((2, 4), 7.0, np.float32)
+    store.write_rows(np.array([1, 5]), patch)  # partial -> RMW path
+    got = store.read_rows_direct(np.arange(100))
+    assert (got[[1, 5]] == 7.0).all()
+    keep = np.setdiff1d(np.arange(100), [1, 5])
+    np.testing.assert_array_equal(got[keep], vals[keep])
 
 
 def test_pds_reduces_chunk_reads(small_graph, sampling_client, layers, tmp_path):
