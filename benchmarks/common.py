@@ -3,7 +3,8 @@
 All pipelines are constructed through the unified facade —
 ``GLISPSystem.build(g, GLISPConfig(...))`` — never by hand-wiring servers
 and routers.  ``glisp_client`` / ``edgecut_client`` return the underlying
-simulation clients for benchmarks that poke workload counters directly.
+``SamplingService`` (the legacy client role) for benchmarks that poke
+workload counters directly.
 """
 from __future__ import annotations
 

@@ -1,0 +1,172 @@
+"""The async sampling service vs the blocking surface.
+
+Three measurements on identical request streams:
+
+- **overlap** — N seed batches sampled one-at-a-time through the blocking
+  ``system.sample`` shim vs submitted as a sliding in-flight window on the
+  ``SamplingService``.  Same per-request RNG keys on two identically-seeded
+  systems, so both paths MUST produce bit-identical subgraphs; we report
+  wall-clock (async must not be slower) and the modeled parallel work,
+  where overlapping in-flight requests shares scheduling rounds and lowers
+  modeled cluster latency.
+- **coalescing** — requests with overlapping frontiers with the duplicate-
+  seed coalescer on vs off: results bit-equal, dispatch accounting
+  (per-seed request overhead) drops.
+- Results land in ``BENCH_sampling.json`` (``--out``); ``--smoke`` shrinks
+  the workload for CI (mirroring ``BENCH_inference.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit
+
+RESULTS: dict = {}
+
+FANOUTS = (10, 5)
+
+
+def _emit(name: str, value: float) -> None:
+    RESULTS[name] = float(value)
+    emit(name, value)
+
+
+def _build(g, parts: int, **overrides):
+    from repro.api import GLISPConfig, GLISPSystem
+
+    return GLISPSystem.build(
+        g, GLISPConfig(num_parts=parts, fanouts=FANOUTS, seed=0, **overrides)
+    )
+
+
+def _same_subgraph(a, b) -> bool:
+    if len(a.hops) != len(b.hops):
+        return False
+    return all(
+        np.array_equal(ha.src, hb.src) and np.array_equal(ha.dst, hb.dst)
+        for ha, hb in zip(a.hops, b.hops)
+    )
+
+
+def _seed_batches(g, num_batches: int, batch: int):
+    rng = np.random.default_rng(0)
+    return [
+        np.sort(rng.choice(g.num_vertices, batch, replace=False))
+        for _ in range(num_batches)
+    ]
+
+
+def bench_overlap(g, parts: int, batches, window: int) -> None:
+    from repro.api import SamplingSpec
+
+    spec = SamplingSpec(fanouts=FANOUTS)
+    keys = [(0xB0B, i) for i in range(len(batches))]
+
+    # blocking: submit-and-wait one request at a time (the old surface)
+    blocking = _build(g, parts)
+    t0 = time.perf_counter()
+    subs_blocking = [
+        blocking.submit(s, spec, key=k).result()
+        for s, k in zip(batches, keys)
+    ]
+    wall_blocking = time.perf_counter() - t0
+
+    # async: a sliding window of `window` requests in flight
+    asyncs = _build(g, parts)
+    t0 = time.perf_counter()
+    subs_async = []
+    inflight = []
+    it = iter(zip(batches, keys))
+    while True:
+        while len(inflight) < window:
+            nxt = next(it, None)
+            if nxt is None:
+                break
+            inflight.append(asyncs.submit(nxt[0], spec, key=nxt[1]))
+        if not inflight:
+            break
+        subs_async.append(inflight.pop(0).result())
+    wall_async = time.perf_counter() - t0
+
+    identical = all(
+        _same_subgraph(a, b) for a, b in zip(subs_blocking, subs_async)
+    )
+    RESULTS["overlap/bit_identical"] = bool(identical)
+    emit("overlap/bit_identical", 1.0 if identical else 0.0)
+    _emit("overlap/blocking_wall_s", wall_blocking)
+    _emit("overlap/async_wall_s", wall_async)
+    _emit("overlap/blocking_parallel_work", blocking.service.parallel_work)
+    _emit("overlap/async_parallel_work", asyncs.service.parallel_work)
+    _emit(
+        "overlap/parallel_work_win",
+        blocking.service.parallel_work
+        / max(asyncs.service.parallel_work, 1e-9),
+    )
+    no_slower = wall_async <= wall_blocking * 1.15  # same draws, small slack
+    RESULTS["overlap/async_no_slower"] = bool(no_slower)
+    emit("overlap/async_no_slower", 1.0 if no_slower else 0.0)
+
+
+def bench_coalescing(g, parts: int, batches) -> None:
+    from repro.api import SamplingSpec
+
+    spec = SamplingSpec(fanouts=FANOUTS)
+    # overlapping frontiers: consecutive batches share half their seeds
+    shared = [
+        np.union1d(a[: a.shape[0] // 2], b[: b.shape[0] // 2])
+        for a, b in zip(batches, batches[1:])
+    ] or batches
+    keys = [(0xC0A, i) for i in range(len(shared))]
+
+    stats = {}
+    subs = {}
+    for coalesce in (True, False):
+        system = _build(g, parts, coalesce=coalesce)
+        tickets = [
+            system.submit(s, spec, key=k) for s, k in zip(shared, keys)
+        ]
+        subs[coalesce] = [t.result() for t in tickets]
+        stats[coalesce] = system.service.stats()
+    identical = all(
+        _same_subgraph(a, b) for a, b in zip(subs[True], subs[False])
+    )
+    RESULTS["coalesce/bit_identical"] = bool(identical)
+    emit("coalesce/bit_identical", 1.0 if identical else 0.0)
+    _emit("coalesce/seeds_dispatched_on", stats[True].seeds)
+    _emit("coalesce/seeds_dispatched_off", stats[False].seeds)
+    _emit(
+        "coalesce/dispatch_savings",
+        1.0 - stats[True].seeds / max(stats[False].seeds, 1),
+    )
+
+
+def run(smoke: bool = False, out_json: str | None = "BENCH_sampling.json"):
+    scale = 0.02 if smoke else 0.12
+    parts = 4
+    num_batches = 8 if smoke else 48
+    batch = 128 if smoke else 512
+    window = 4
+    g = dataset("wikikg90m", scale=scale, feat_dim=8)
+    batches = _seed_batches(g, num_batches, batch)
+
+    bench_overlap(g, parts, batches, window)
+    bench_coalescing(g, parts, batches)
+
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(RESULTS, fh, indent=2, sort_keys=True)
+        print(f"wrote {out_json}")
+    assert RESULTS["overlap/bit_identical"], "async result diverged"
+    assert RESULTS["coalesce/bit_identical"], "coalesced result diverged"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI workload")
+    ap.add_argument("--out", default="BENCH_sampling.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_json=args.out)

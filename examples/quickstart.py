@@ -6,9 +6,12 @@ driven entirely through the unified facade (repro.api).
 1. generate a power-law graph
 2. GLISPSystem.build — AdaDNE vertex-cut partitioning + Gather-Apply
    sampling service, all resolved by registry name from GLISPConfig
-3. sample a K-hop subgraph through the one shared backend surface
+3. sample K-hop subgraphs through the async request-plan service
+   (submit -> SampleTicket -> result), with in-flight requests
+   overlapping hop levels on the shared SamplingService
 4. train GraphSAGE with the prefetching batch pipeline (host sampling
-   overlaps the jit'd train step)
+   overlaps the jit'd train step; the pipeline keeps `inflight` sample
+   requests riding on the service at once)
 5. run layerwise full-graph inference with the two-level cache + PDS
 """
 import tempfile
@@ -16,7 +19,7 @@ import time
 
 import numpy as np
 
-from repro.api import GLISPConfig, GLISPSystem
+from repro.api import GLISPConfig, GLISPSystem, SamplingSpec
 from repro.graph import power_law_graph
 from repro.models.gnn import GNNModel
 from repro.train.optim import AdamWConfig
@@ -46,10 +49,25 @@ m = system.partition_metrics()
 print(f"   RF={m['RF']:.3f} VB={m['VB']:.3f} EB={m['EB']:.3f} "
       f"({time.perf_counter()-t0:.2f}s)")
 
-print("== 3. sample through the unified backend ==")
+print("== 3. sample through the async request-plan service ==")
+# blocking convenience: submit-and-wait in one call
 sub = system.sample(np.arange(64), fanouts=[15, 10, 5])
 print(f"   3-hop sample of 64 seeds: {sub.num_edges} edges, "
       f"{sub.all_vertices().shape[0]} vertices")
+# the ticket API: several requests ride in flight on the one service;
+# the scheduler overlaps their hops and coalesces shared frontier seeds,
+# and per-request RNG keys keep every result bit-reproducible
+spec = SamplingSpec(fanouts=(15, 10, 5))
+tickets = [
+    system.submit(np.arange(lo, lo + 64), spec, key=(lo,))
+    for lo in (0, 64, 128)
+]
+print(f"   {system.service.inflight()} requests in flight ...")
+subs = [t.result() for t in tickets]
+stats = system.service.stats()
+print(f"   {sum(s.num_edges for s in subs)} edges over {len(subs)} tickets | "
+      f"service stats: {stats.requests} dispatches, "
+      f"{stats.seeds} seeds, {stats.edges_returned} edges returned")
 
 print("== 4. train GraphSAGE (prefetching pipeline) ==")
 ids = np.arange(g.num_vertices)

@@ -23,7 +23,13 @@ from repro.api.config import GLISPConfig
 from repro.api.pipeline import BatchPipeline
 from repro.api.registry import Registry
 from repro.api.system import GLISPSystem
-from repro.core.sampling.service import DEFAULT_DIRECTION
+from repro.core.sampling.service import (
+    DEFAULT_DIRECTION,
+    SampleRequest,
+    SampleTicket,
+    SamplingService,
+    SamplingSpec,
+)
 
 __all__ = [
     "GLISPConfig",
@@ -34,6 +40,10 @@ __all__ = [
     "SamplerBackend",
     "GatherApplyBackend",
     "EdgeCutBackend",
+    "SamplingSpec",
+    "SampleRequest",
+    "SampleTicket",
+    "SamplingService",
     "PARTITIONERS",
     "SAMPLERS",
     "REORDERS",

@@ -1,15 +1,18 @@
 """Pluggable components behind the GLISP facade.
 
 Defines the four registries named by ``GLISPConfig`` string fields and the
-``SamplerBackend`` protocol that puts ``GatherApplyClient`` (GLISP) and
-``EdgeCutClient`` (DistDGL-style baseline) behind ONE sampling surface:
+``SamplerBackend`` protocol.  Since the request-plan redesign, BOTH sampler
+backends are one ``SamplingService`` behind different routing strategies
+(``GatherApplyRouting`` for GLISP, ``OwnerRouting`` for the DistDGL-style
+baseline) — no parallel client class hierarchies.  The preferred surface is
+asynchronous:
 
-    backend.sample(seeds, fanouts, weighted=..., direction=...) -> SampledSubgraph
+    ticket = backend.submit(seeds, spec)        # SampleTicket (future)
+    sub = ticket.result()
 
-Both backends share the same default direction (``DEFAULT_DIRECTION``) and
-the same stats discipline — ``reset_stats()`` clears per-server counters AND
-the client's parallel/total work accumulators, which the raw clients handled
-inconsistently (callers had to poke ``client.parallel_work = 0.0`` by hand).
+``backend.sample(seeds, fanouts, ...)`` remains as a submit-and-wait shim
+for one release of deprecation; new call sites should build a
+``SamplingSpec`` and go through ``submit``.
 """
 from __future__ import annotations
 
@@ -30,10 +33,14 @@ from repro.core.partition import (
 )
 from repro.core.sampling.service import (
     DEFAULT_DIRECTION,
-    EdgeCutClient,
-    GatherApplyClient,
+    GatherApplyRouting,
+    OwnerRouting,
     SampledSubgraph,
+    SampleTicket,
+    SamplingService,
+    SamplingSpec,
     SamplingServer,
+    ServerStats,
     VertexRouter,
 )
 from repro.graph.graph import GraphPartition, HeteroGraph
@@ -122,6 +129,15 @@ class SamplerBackend(Protocol):
 
     name: str
 
+    def submit(
+        self,
+        seeds: np.ndarray,
+        spec: SamplingSpec | None = None,
+        *,
+        key=None,
+    ) -> SampleTicket: ...
+
+    # DEPRECATED submit-and-wait shim (kept one release)
     def sample(
         self,
         seeds: np.ndarray,
@@ -136,14 +152,25 @@ class SamplerBackend(Protocol):
     def reset_stats(self) -> None: ...
 
 
-class _ClientBackend:
-    """Shared adapter over the in-process simulation clients."""
+class _ServiceBackend:
+    """Shared adapter: one ``SamplingService`` behind the backend protocol."""
 
     name = "base"
 
-    def __init__(self, client):
-        self.client = client
+    def __init__(self, service: SamplingService):
+        self.service = service
 
+    # -- async request-plan surface ------------------------------------
+    def submit(
+        self,
+        seeds: np.ndarray,
+        spec: SamplingSpec | None = None,
+        *,
+        key=None,
+    ) -> SampleTicket:
+        return self.service.submit(seeds, spec, key=key)
+
+    # -- blocking shim (one release of deprecation) --------------------
     def sample(
         self,
         seeds: np.ndarray,
@@ -152,48 +179,58 @@ class _ClientBackend:
         weighted: bool = False,
         direction: str = DEFAULT_DIRECTION,
     ) -> SampledSubgraph:
-        return self.client.sample_khop(
+        """DEPRECATED: submit-and-wait over :meth:`submit`."""
+        return self.service.sample_khop(
             seeds, list(fanouts), weighted=weighted, direction=direction
         )
 
+    # -- stats ---------------------------------------------------------
+    def stats(self) -> ServerStats:
+        return self.service.stats()
+
     def server_workloads(self) -> np.ndarray:
-        return self.client.server_workloads()
+        return self.service.server_workloads()
 
     def reset_stats(self) -> None:
-        self.client.reset_stats()
-        self.client.parallel_work = 0.0
-        self.client.total_work = 0.0
+        # the service's reset clears per-server counters AND the
+        # parallel/total work accumulators — no adapter workaround needed
+        self.service.reset_stats()
+
+    @property
+    def client(self):
+        """Legacy alias: the service plays the old client role."""
+        return self.service
 
     @property
     def parallel_work(self) -> float:
-        return self.client.parallel_work
+        return self.service.parallel_work
 
     @property
     def total_work(self) -> float:
-        return self.client.total_work
+        return self.service.total_work
 
     def __repr__(self) -> str:
-        return f"{type(self).__name__}(servers={len(self.client.servers)})"
+        return f"{type(self).__name__}(servers={len(self.service.servers)})"
 
 
-class GatherApplyBackend(_ClientBackend):
+class GatherApplyBackend(_ServiceBackend):
     """GLISP: vertex-cut servers, Gather from every host, Apply merge."""
 
     name = "gather_apply"
 
     @property
     def router(self) -> VertexRouter:
-        return self.client.router
+        return self.service.router
 
 
-class EdgeCutBackend(_ClientBackend):
+class EdgeCutBackend(_ServiceBackend):
     """DistDGL-style baseline: one-hop answered only by the seed's owner."""
 
     name = "edge_cut"
 
     @property
     def vertex_owner(self) -> np.ndarray:
-        return self.client.owner
+        return self.service.routing.owner
 
 
 SAMPLERS: Registry = Registry("sampler backend")
@@ -209,7 +246,14 @@ def _build_gather_apply(
     cost = config.cost_model or "algd"
     servers = [SamplingServer(p, seed=config.seed, cost_model=cost) for p in parts]
     router = VertexRouter(g, plan.edge_parts, config.num_parts)
-    return GatherApplyBackend(GatherApplyClient(servers, router, seed=config.seed))
+    service = SamplingService(
+        servers,
+        GatherApplyRouting(router),
+        seed=config.seed,
+        coalesce=config.coalesce,
+        max_server_batch=config.max_server_batch,
+    )
+    return GatherApplyBackend(service)
 
 
 @SAMPLERS.register("edge_cut")
@@ -227,9 +271,14 @@ def _build_edge_cut(
         )
     cost = config.cost_model or "scan"
     servers = [SamplingServer(p, seed=config.seed, cost_model=cost) for p in parts]
-    return EdgeCutBackend(
-        EdgeCutClient(servers, plan.vertex_owner, seed=config.seed)
+    service = SamplingService(
+        servers,
+        OwnerRouting(plan.vertex_owner, config.num_parts),
+        seed=config.seed,
+        coalesce=config.coalesce,
+        max_server_batch=config.max_server_batch,
     )
+    return EdgeCutBackend(service)
 
 
 # ---------------------------------------------------------------------------

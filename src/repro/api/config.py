@@ -5,13 +5,21 @@ so a config serializes to JSON and a whole pipeline is reproducible from it:
 
     cfg = GLISPConfig(num_parts=4, partitioner="adadne", fanouts=(15, 10, 5))
     system = GLISPSystem.build(g, cfg)
+
+The sampling-plan fields (``fanouts``/``weighted``/``direction``/``replace``)
+are one ``SamplingSpec``: ``cfg.sampling_spec()`` materializes the typed,
+validated object every sampling surface consumes.
 """
 from __future__ import annotations
 
 import dataclasses
 from dataclasses import dataclass
 
-from repro.core.sampling.service import DEFAULT_DIRECTION, MAX_PARTS
+from repro.core.sampling.service import (
+    DEFAULT_DIRECTION,
+    MAX_PARTS,
+    SamplingSpec,
+)
 
 __all__ = ["GLISPConfig"]
 
@@ -27,9 +35,20 @@ class GLISPConfig:
     fanouts: tuple = (10, 5)
     direction: str = DEFAULT_DIRECTION  # shared by trainer/engine/loader
     weighted: bool = False
+    # with-replacement uniform draws (uniform-only); named sample_replace
+    # because `replace()` is the config-evolution method
+    sample_replace: bool = False
     # server cost model; None picks the backend's native one
     # (gather_apply -> "algd", edge_cut -> "scan")
     cost_model: str | None = None
+    # request-level scheduling: dedupe duplicate frontier seeds across
+    # in-flight requests (accounting only — results are bit-identical)
+    coalesce: bool = True
+    # split per-server dispatches larger than this many seeds; 0 = unsplit
+    max_server_batch: int = 0
+    # loader/trainer submission window: how many sample requests ride
+    # in-flight on the service at once (1 = the old blocking behavior)
+    inflight: int = 2
 
     # -- batch pipeline ------------------------------------------------------
     batch_size: int = 256
@@ -57,6 +76,23 @@ class GLISPConfig:
     seed: int = 0
 
     # -----------------------------------------------------------------------
+    def sampling_spec(
+        self,
+        *,
+        fanouts=None,
+        weighted: bool | None = None,
+        direction: str | None = None,
+        replace: bool | None = None,
+    ) -> SamplingSpec:
+        """The config's sampling plan as one typed object (with per-call
+        overrides) — what ``system.sample/submit/loader/trainer`` consume."""
+        return SamplingSpec(
+            fanouts=tuple(fanouts if fanouts is not None else self.fanouts),
+            weighted=self.weighted if weighted is None else weighted,
+            direction=direction or self.direction,
+            replace=self.sample_replace if replace is None else replace,
+        )
+
     def validate(self) -> "GLISPConfig":
         """Check every registry name and numeric range; returns self."""
         from repro.api.backends import (
@@ -74,18 +110,26 @@ class GLISPConfig:
         SAMPLERS.get(self.sampler)
         REORDERS.get(self.reorder)
         CACHE_POLICIES.get(self.cache_policy)
-        if self.direction not in ("out", "in"):
-            raise ValueError(f"direction must be 'out' or 'in', got {self.direction!r}")
+        self.sampling_spec().validate()
         if self.cost_model not in (None, "algd", "scan"):
             raise ValueError(
                 f"cost_model must be None, 'algd' or 'scan', got {self.cost_model!r}"
             )
-        if not self.fanouts or any(f <= 0 for f in self.fanouts):
-            raise ValueError(f"fanouts must be positive, got {self.fanouts!r}")
-        if self.batch_size <= 0:
-            raise ValueError(f"batch_size must be positive, got {self.batch_size}")
-        if self.prefetch < 0:
-            raise ValueError(f"prefetch must be >= 0, got {self.prefetch}")
+        for name in (
+            "batch_size",
+            "vertex_quantum",
+            "edge_quantum",
+            "chunk_rows",
+            "infer_batch_size",
+            "inflight",
+        ):
+            v = getattr(self, name)
+            if v <= 0:
+                raise ValueError(f"{name} must be positive, got {v}")
+        for name in ("prefetch", "max_server_batch"):
+            v = getattr(self, name)
+            if v < 0:
+                raise ValueError(f"{name} must be >= 0, got {v}")
         if not 0.0 <= self.dynamic_frac <= 1.0:
             raise ValueError(f"dynamic_frac must be in [0, 1], got {self.dynamic_frac}")
         if self.infer_mode not in ("bucketed", "reference"):

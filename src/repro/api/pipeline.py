@@ -1,10 +1,20 @@
 """The fused batch pipeline: seed loading -> K-hop sampling -> padded batch.
 
-``BatchPipeline`` composes ``SeedBatchLoader`` + ``backend.sample`` +
-``subgraph_to_batch`` behind one iterator and, with ``prefetch >= 1``, runs
-the host-side sampling ahead of the jit'd device step so the two overlap —
-turning ``sample_time + compute_time`` per step into roughly
-``max(sample_time, compute_time)``.
+``BatchPipeline`` composes ``SeedBatchLoader`` + the sampling service +
+``subgraph_to_batch`` behind one iterator, with two *independent* overlap
+axes:
+
+``prefetch >= 1`` — the host-side producer (sampling + padding) runs ahead
+    of the jit'd device step in a forked worker or thread, so the two
+    overlap: ``sample_time + compute_time`` per step becomes roughly
+    ``max(sample_time, compute_time)``.
+``inflight >= 2`` — the producer keeps that many sample *requests* in
+    flight on the ``SamplingService`` at once (a submission window), so the
+    service's scheduler advances batch k's hop-2 beside batch k+1's hop-1,
+    coalescing shared frontier seeds across the window.  Requests carry
+    pipeline-owned keys ``(seed, batch_index)``, so the batch stream is
+    bit-identical for ANY window depth and even when several pipelines
+    share one service.
 
 Two worker modes:
 
@@ -18,13 +28,15 @@ Two worker modes:
     hand-off, but overlap is limited to the consumer's GIL-released windows.
 
 Determinism: one persistent producer (process or thread) runs exactly the
-serial code path on the same initial state, so the batch stream is
-bit-identical to ``prefetch=0`` (tested in tests/test_api.py).  Note that in
-process mode the sampling-server RNG/stats live in the worker, so read
-workload counters with ``prefetch=0`` pipelines.
+serial code path on the same initial state, and sampling randomness is keyed
+per request, so the batch stream is bit-identical to ``prefetch=0`` AND to
+any ``inflight`` depth (tested in tests/test_api.py and tests/test_service.py).
+Note that in process mode the sampling-server stats live in the worker, so
+read workload counters with ``prefetch=0`` pipelines.
 """
 from __future__ import annotations
 
+import collections
 import multiprocessing as mp
 import os
 import queue as queue_mod
@@ -36,7 +48,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core.sampling.service import DEFAULT_DIRECTION
+from repro.core.sampling.service import DEFAULT_DIRECTION, SamplingSpec
 from repro.data.graph_loader import SeedBatchLoader
 from repro.models.gnn.batching import GNNBatch, subgraph_to_batch
 from repro.utils import prefetch_iterator
@@ -44,6 +56,8 @@ from repro.utils import prefetch_iterator
 __all__ = ["BatchPipeline"]
 
 _FORK_AVAILABLE = os.name == "posix" and "fork" in mp.get_all_start_methods()
+
+_KEY_MASK = (1 << 64) - 1
 
 
 class BatchPipeline:
@@ -56,9 +70,11 @@ class BatchPipeline:
         num_layers: int,
         *,
         batch_size: int = 256,
+        spec: SamplingSpec | None = None,
         weighted: bool = False,
         direction: str = DEFAULT_DIRECTION,
         prefetch: int = 2,
+        inflight: int = 1,
         workers: str = "auto",  # auto | process | thread
         worker_cores: tuple | None = None,  # CPU affinity for process workers
         seed: int = 0,
@@ -71,15 +87,32 @@ class BatchPipeline:
             raise ValueError(
                 f"workers must be 'auto', 'process' or 'thread', got {workers!r}"
             )
+        if inflight < 1:
+            raise ValueError(f"inflight must be >= 1, got {inflight}")
         self.backend = backend
-        # accept a SamplerBackend or a raw GatherApply/EdgeCut client
+        # accept a SamplerBackend or a raw GatherApply/EdgeCut client; the
+        # async submission window needs `submit` (the service surface)
         self._sample = getattr(backend, "sample", None) or backend.sample_khop
+        self._submit = getattr(backend, "submit", None)
         self.graph = graph
-        self.fanouts = list(fanouts)
+        self.spec = (
+            spec
+            if spec is not None
+            else SamplingSpec(
+                fanouts=tuple(fanouts), weighted=weighted, direction=direction
+            )
+        ).validate()
+        self.fanouts = list(self.spec.fanouts)
         self.num_layers = num_layers
-        self.weighted = weighted
-        self.direction = direction
+        self.weighted = self.spec.weighted
+        self.direction = self.spec.direction
+        if self.spec.replace and self._submit is None:
+            raise ValueError(
+                "replace-policy sampling needs a SamplingService backend "
+                "(raw clients only support without-replacement draws)"
+            )
         self.prefetch = prefetch
+        self.inflight = inflight
         self.workers = (
             ("process" if _FORK_AVAILABLE else "thread")
             if workers == "auto"
@@ -96,17 +129,43 @@ class BatchPipeline:
             balance_partitions=balance_partitions,
         )
         self.sample_time = 0.0  # producer-side host time (sampling + padding)
+        # request keys are pipeline-owned: (loader seed, running index), so
+        # the stream is independent of the service's other consumers
+        self._key_base = int(seed) & _KEY_MASK
+        self._req_counter = 0
+        self._pending = collections.deque()  # (seeds, SampleTicket) in order
         self._proc = None
         self._cmd_q = None
         self._data_q = None
         self._cancel = None  # mp.Event: stop the worker's current run early
 
     # ------------------------------------------------------------------
-    def make_batch(self, seeds: np.ndarray) -> GNNBatch:
-        """One seed batch through sampling + padding (numpy, no prefetch)."""
-        sub = self._sample(
+    def _next_key(self) -> tuple:
+        key = (self._key_base, self._req_counter)
+        self._req_counter += 1
+        return key
+
+    def _submit_ahead(self, seeds: np.ndarray) -> None:
+        ticket = self._submit(seeds, self.spec, key=self._next_key())
+        self._pending.append((seeds, ticket))
+
+    def _take_sample(self, seeds: np.ndarray):
+        """The subgraph for one seed batch: the pre-submitted in-flight
+        ticket when the look-ahead window holds one, else a fresh request.
+        Keys are assigned in batch order either way, so windowed and
+        unwindowed streams are bit-identical."""
+        if self._pending and np.array_equal(self._pending[0][0], seeds):
+            _, ticket = self._pending.popleft()
+            return ticket.result()
+        if self._submit is not None:
+            return self._submit(seeds, self.spec, key=self._next_key()).result()
+        return self._sample(
             seeds, self.fanouts, weighted=self.weighted, direction=self.direction
         )
+
+    def make_batch(self, seeds: np.ndarray) -> GNNBatch:
+        """One seed batch through sampling + padding (numpy, no prefetch)."""
+        sub = self._take_sample(seeds)
         return subgraph_to_batch(
             sub,
             self.graph.vertex_feats,
@@ -117,16 +176,59 @@ class BatchPipeline:
             edge_quantum=self.edge_quantum,
         )
 
-    def _produce_np(self, epochs: int):
-        """The serial producer: pure numpy, safe inside the forked worker."""
+    def _seed_stream(self, epochs: int):
         for _ in range(epochs):
             for seeds in self.loader.epoch():
                 if self._cancel is not None and self._cancel.is_set():
                     return
+                yield seeds
+
+    def _drop_pending(self) -> None:
+        """Cancel in-flight window tickets so abandoned requests stop
+        consuming scheduler rounds and skewing workload counters."""
+        while self._pending:
+            _, ticket = self._pending.popleft()
+            ticket.cancel()
+
+    def _produce_np(self, epochs: int):
+        """The serial producer: pure numpy, safe inside the forked worker.
+        With ``inflight >= 2`` and a service backend it keeps a window of
+        sample requests in flight ahead of the batch being padded.
+
+        The bit-identity contract (any prefetch/inflight depth, shared or
+        private service) applies to runs driven to completion: abandoning a
+        run mid-epoch leaves the seed loader — and, pre-dating this PR, any
+        prefetch look-ahead — at an implementation-defined position, so a
+        SUBSEQUENT run on the same pipeline resumes from wherever the
+        producer stopped."""
+        self._drop_pending()  # stale tickets from an abandoned run
+        stream = self._seed_stream(epochs)
+        windowed = self.inflight > 1 and self._submit is not None
+        queue: collections.deque = collections.deque()
+        try:
+            while True:
+                if windowed:
+                    while len(queue) < self.inflight:
+                        nxt = next(stream, None)
+                        if nxt is None:
+                            break
+                        t0 = time.perf_counter()
+                        self._submit_ahead(nxt)
+                        self.sample_time += time.perf_counter() - t0
+                        queue.append(nxt)
+                    if not queue:
+                        return
+                    seeds = queue.popleft()
+                else:
+                    seeds = next(stream, None)
+                    if seeds is None:
+                        return
                 t0 = time.perf_counter()
                 batch = self.make_batch(seeds)
                 self.sample_time += time.perf_counter() - t0
                 yield seeds, batch
+        finally:
+            self._drop_pending()
 
     def _produce(self, epochs: int):
         for seeds, batch in self._produce_np(epochs):

@@ -3,13 +3,15 @@
     from repro.api import GLISPConfig, GLISPSystem
 
     system = GLISPSystem.build(g, GLISPConfig(num_parts=4, fanouts=(15, 10, 5)))
-    sub = system.sample(seeds)                      # Gather-Apply K-hop
+    ticket = system.submit(seeds)                   # async request plan
+    sub = ticket.result()                           # Gather-Apply K-hop
+    sub = system.sample(seeds)                      # blocking convenience
     for seeds, batch in system.loader(train_ids):   # prefetching pipeline
         ...
     trainer = system.train(model, train_ids, epochs=2)
     result = system.infer_layerwise(layer_fns, workdir)
 
-``build`` runs partitioner -> partition materialization -> sampler backend,
+``build`` runs partitioner -> partition materialization -> sampling service,
 each resolved by name from the registries in ``repro.api.backends``; no
 caller ever wires ``SamplingServer`` / ``VertexRouter`` by hand again.
 """
@@ -77,25 +79,67 @@ class GLISPSystem:
 
     # -- sampling ------------------------------------------------------
     @property
+    def service(self):
+        """The shared ``SamplingService`` (servers, scheduler, counters)."""
+        return self.backend.service
+
+    @property
     def client(self):
-        """The underlying simulation client (workload counters live here)."""
-        return self.backend.client
+        """Legacy alias for :attr:`service` (workload counters live here)."""
+        return self.backend.service
+
+    def submit(
+        self,
+        seeds: np.ndarray,
+        spec=None,
+        *,
+        key=None,
+        fanouts=None,
+        weighted: bool | None = None,
+        direction: str | None = None,
+        replace: bool | None = None,
+    ):
+        """Submit an asynchronous sample request; returns a ``SampleTicket``.
+
+        The plan is ``spec`` (a ``SamplingSpec``) or the config's spec with
+        per-call overrides.  Multiple tickets may ride in flight at once —
+        the service overlaps their hops and coalesces shared frontier
+        seeds; ``ticket.result()`` is bit-identical either way."""
+        if spec is None:
+            spec = self.config.sampling_spec(
+                fanouts=fanouts,
+                weighted=weighted,
+                direction=direction,
+                replace=replace,
+            )
+        elif any(
+            x is not None for x in (fanouts, weighted, direction, replace)
+        ):
+            raise ValueError(
+                "pass either a SamplingSpec or individual "
+                "fanouts/weighted/direction/replace overrides, not both"
+            )
+        return self.backend.submit(seeds, spec, key=key)
 
     def sample(
         self,
         seeds: np.ndarray,
         fanouts=None,
         *,
+        spec=None,
         weighted: bool | None = None,
         direction: str | None = None,
+        replace: bool | None = None,
     ):
-        cfg = self.config
-        return self.backend.sample(
+        """Blocking convenience: ``submit(...).result()``."""
+        return self.submit(
             seeds,
-            list(fanouts if fanouts is not None else cfg.fanouts),
-            weighted=cfg.weighted if weighted is None else weighted,
-            direction=direction or cfg.direction,
-        )
+            spec,
+            fanouts=fanouts,
+            weighted=weighted,
+            direction=direction,
+            replace=replace,
+        ).result()
 
     def partition_metrics(self) -> dict:
         if self._metrics is None:
@@ -120,23 +164,28 @@ class GLISPSystem:
         prefetch: int | None = None,
         seed: int | None = None,
         fanouts=None,
+        spec=None,
+        inflight: int | None = None,
     ) -> BatchPipeline:
-        """A prefetching seed->batch pipeline over this system's backend."""
+        """A prefetching seed->batch pipeline over this system's service."""
         cfg = self.config
         partition_of = (
             self.plan.vertex_owner if cfg.balance_partitions else None
         )
-        fanouts = list(fanouts if fanouts is not None else cfg.fanouts)
+        if spec is None:
+            spec = cfg.sampling_spec(fanouts=fanouts)
+        elif fanouts is not None:
+            raise ValueError("pass either a SamplingSpec or fanouts, not both")
         return BatchPipeline(
             self.backend,
             self.graph,
             seeds,
-            fanouts,
-            num_layers if num_layers is not None else len(fanouts),
+            list(spec.fanouts),
+            num_layers if num_layers is not None else len(spec.fanouts),
             batch_size=batch_size if batch_size is not None else cfg.batch_size,
-            weighted=cfg.weighted,
-            direction=cfg.direction,
+            spec=spec,
             prefetch=prefetch if prefetch is not None else cfg.prefetch,
+            inflight=inflight if inflight is not None else cfg.inflight,
             seed=cfg.seed if seed is None else seed,
             partition_of=partition_of,
             balance_partitions=cfg.balance_partitions,
@@ -154,23 +203,26 @@ class GLISPSystem:
         batch_size: int | None = None,
         prefetch: int | None = None,
         worker_cores: tuple | None = None,
+        spec=None,
+        inflight: int | None = None,
     ):
         """A ``GNNTrainer`` wired to this system's backend and config."""
         from repro.train.loop import GNNTrainer  # lazy: avoids import cycle
 
         cfg = self.config
+        spec = spec if spec is not None else cfg.sampling_spec()
         return GNNTrainer(
             model,
             self.backend,
             self.graph,
-            list(cfg.fanouts),
+            list(spec.fanouts),
             train_ids,
             batch_size=batch_size if batch_size is not None else cfg.batch_size,
             opt=opt,
-            direction=cfg.direction,
+            spec=spec,
             seed=cfg.seed,
-            weighted=cfg.weighted,
             prefetch=prefetch if prefetch is not None else cfg.prefetch,
+            inflight=inflight if inflight is not None else cfg.inflight,
             worker_cores=worker_cores,
             partition_of=(
                 self.plan.vertex_owner if cfg.balance_partitions else None

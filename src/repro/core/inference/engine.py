@@ -41,7 +41,12 @@ from repro.core.sampling.service import (
     DEFAULT_DIRECTION,
     MAX_PARTS,
     GatherApplyClient,
+    SamplingSpec,
 )
+
+# domain-separation tag for the engine's sample-request RNG keys, so they
+# never alias a loader/trainer request stream on a shared service
+_ENGINE_KEY_TAG = 0x1F7E
 from repro.graph.graph import GraphPartition, HeteroGraph
 from repro.graph.reorder import reorder_permutation
 
@@ -150,7 +155,7 @@ class LayerwiseInferenceEngine:
     def __init__(
         self,
         g: HeteroGraph,
-        client: GatherApplyClient,
+        client,  # SamplingService (preferred) or a raw GatherApplyClient
         layer_fns: list,
         feats: np.ndarray,
         workdir: str,
@@ -249,6 +254,13 @@ class LayerwiseInferenceEngine:
             final_store=store_prev, newid=newid, owner=owner
         )
 
+        # inference order within each worker follows the reorder ids
+        part_verts = []
+        for p in range(num_parts):
+            verts = np.flatnonzero(owner == p)
+            part_verts.append(verts[np.argsort(newid[verts], kind="stable")])
+
+        submit = getattr(self.client, "submit", None)
         self._shapes_seen.clear()  # slice_compiles counts per-run shapes
         for k, layer_fn in enumerate(self.layer_fns):
             stats = LayerStats()
@@ -260,15 +272,34 @@ class LayerwiseInferenceEngine:
                 self.out_dims[k],
                 self.chunk_rows,
             )
-            for p in range(num_parts):
-                verts = np.flatnonzero(owner == p)
-                # inference order within the worker follows the reorder ids
-                verts = verts[np.argsort(newid[verts], kind="stable")]
-                # one-hop sampled neighbors for the whole worker (precomputed,
-                # also defines the boundary prefetch set for the static fill)
-                sub = self.client.sample_khop(
-                    verts, [self.fanouts[k]], direction=self.direction
+            # one-hop sampled neighbors for every worker: submit ALL workers'
+            # requests up front so the service schedules them in one round
+            # (balanced dispatch across servers); explicit keys make the
+            # sample independent of any other traffic on a shared service
+            tickets = None
+            if submit is not None:
+                spec = SamplingSpec(
+                    fanouts=(self.fanouts[k],), direction=self.direction
                 )
+                tickets = [
+                    submit(
+                        part_verts[p],
+                        spec,
+                        key=(self.seed, k, p, _ENGINE_KEY_TAG),
+                    )
+                    for p in range(num_parts)
+                ]
+            for p in range(num_parts):
+                verts = part_verts[p]
+                # (the precomputed one-hop also defines the boundary
+                # prefetch set for the static fill)
+                if tickets is not None:
+                    sub = tickets[p].result()
+                    tickets[p] = None  # release the hop data once consumed
+                else:
+                    sub = self.client.sample_khop(
+                        verts, [self.fanouts[k]], direction=self.direction
+                    )
                 hop = sub.hops[0]
                 # static cache fill: all local rows + sampled neighbor rows
                 cache = TwoLevelCache(store_prev, self.policy, self.dynamic_frac)

@@ -1,9 +1,8 @@
 """Gather-Apply distributed K-hop neighbor sampling (paper §III-C, Alg. 1-4).
 
 The P logical sampling servers (one per vertex-cut partition) are simulated
-in-process.  The client routes each one-hop request to *every* server hosting
-the seed (the vertex-cut property), gathers partial samples and applies the
-merge:
+in-process.  One-hop requests are routed to servers by a *routing strategy*,
+partial samples are gathered and (for the vertex-cut layout) merged:
 
   uniform  — server p draws r = f · local_deg/global_deg edges via Algorithm D
              (UniformGatherOp, Alg. 2); Apply joins and trims to f.
@@ -11,17 +10,41 @@ merge:
              returns its top-f with scores (WeightedGatherOp, Alg. 3); Apply
              takes the global top-f by score (WeightedApplyOp, Alg. 4).
 
+Two routing strategies cover the paper's system and the baseline:
+
+``GatherApplyRouting`` — GLISP: every server hosting the seed (the vertex-cut
+    property) answers with its local portion; the client-side Apply merges.
+``OwnerRouting`` — the DistDGL-style baseline: one-hop requests are answered
+    ONLY by the seed's owner (halo edges make the full neighborhood local);
+    no cross-server merge — the hotspot's entire neighborhood burdens a
+    single server, precisely the imbalance GLISP removes.
+
 Per-server workload counters model the paper's Fig.-10 measurement: work is
 dominated by edges touched (weighted scans all local neighbor weights; uniform
 is O(k) thanks to Algorithm D) plus a per-seed request overhead.
 
-``EdgeCutClient`` emulates the DistDGL-style baseline: an edge-cut partitioned
-graph where the one-hop request of a vertex is answered ONLY by its owner
-server (halo edges make it local) — the hotspot's entire neighborhood burdens
-a single server, which is precisely the imbalance GLISP removes.
+Two consumption surfaces share the same servers, routing, and hop executor:
+
+``SamplingService`` (preferred) — the asynchronous request-plan API.  Clients
+    ``submit(SampleRequest) -> SampleTicket`` and read ``ticket.result()``;
+    the service advances every in-flight request one hop per scheduling
+    round, so concurrent requests overlap hop levels (request k's hop-2 runs
+    beside request k+1's hop-1), duplicate frontier seeds across in-flight
+    requests are coalesced into one dispatch, and oversized per-server
+    batches are split.  Randomness is keyed per ``(service seed, request
+    key, hop, server, chunk)``, so a request's result is bit-identical
+    regardless of prefetch depth, submission interleaving, or how many
+    concurrent clients share the service.
+
+``GatherApplyClient`` / ``EdgeCutClient`` (legacy, blocking) — thin
+    synchronous wrappers over the same routing strategies + hop executor,
+    drawing from shared per-server RNG streams (results depend on call
+    order).  Kept for raw single-consumer use; new code should go through
+    ``SamplingService``.
 """
 from __future__ import annotations
 
+import threading
 from dataclasses import dataclass, field
 
 import numpy as np
@@ -33,6 +56,13 @@ __all__ = [
     "MAX_PARTS",
     "VertexRouter",
     "SamplingServer",
+    "ServerStats",
+    "SamplingSpec",
+    "SampleRequest",
+    "SampleTicket",
+    "SamplingService",
+    "GatherApplyRouting",
+    "OwnerRouting",
     "GatherApplyClient",
     "EdgeCutClient",
     "SampledHop",
@@ -47,6 +77,13 @@ DEFAULT_DIRECTION = "out"
 # The router packs hosting sets into a uint64 bitmask; more partitions than
 # bits silently alias (1 << p wraps), corrupting routing.
 MAX_PARTS = 64
+
+_KEY_MASK = (1 << 64) - 1
+# domain-separation tags for the per-request RNG streams (gather draws vs
+# the client-side Apply trim) so the two never alias
+_GATHER_TAG = 0x6A7
+
+_TRIM_TAG = 0x7213
 
 
 # ---------------------------------------------------------------------------
@@ -79,6 +116,33 @@ class VertexRouter:
             bit = np.uint64(1 << p)
             out.append(gids[(self.mask[gids] & bit) != 0])
         return out
+
+
+class GatherApplyRouting:
+    """GLISP routing: every server hosting a seed answers; Apply merges."""
+
+    merge = True
+
+    def __init__(self, router: VertexRouter):
+        self.router = router
+
+    def route(self, frontier: np.ndarray) -> list[np.ndarray]:
+        return self.router.servers_of(frontier)
+
+
+class OwnerRouting:
+    """DistDGL-style routing: only the seed's owner answers; no merge (the
+    owner's halo holds the FULL one-hop, so local_deg == global_deg)."""
+
+    merge = False
+
+    def __init__(self, owner: np.ndarray, num_parts: int):
+        self.owner = owner
+        self.num_parts = num_parts
+
+    def route(self, frontier: np.ndarray) -> list[np.ndarray]:
+        owners = self.owner[frontier]
+        return [frontier[owners == p] for p in range(self.num_parts)]
 
 
 # ---------------------------------------------------------------------------
@@ -159,8 +223,19 @@ class SamplingServer:
 
     # -- UniformGatherOp (Alg. 2) -------------------------------------------
     def uniform_gather(
-        self, seeds_gid: np.ndarray, fanout: int, direction: str = DEFAULT_DIRECTION
+        self,
+        seeds_gid: np.ndarray,
+        fanout: int,
+        direction: str = DEFAULT_DIRECTION,
+        *,
+        rng: np.random.Generator | None = None,
+        replace: bool = False,
     ):
+        """``rng=None`` draws from the server's shared stream (legacy blocking
+        clients); the service passes a per-request stream so results are
+        independent of request interleaving.  ``replace=True`` draws each of
+        the r slots independently (with replacement)."""
+        rng = self.rng if rng is None else rng
         p = self.part
         lids = p.global_to_local(seeds_gid)
         ok = lids >= 0
@@ -172,8 +247,11 @@ class SamplingServer:
         global_deg = np.maximum(1, self._global_degree(lids, direction))
         r = fanout * local_deg / global_deg
         k = np.floor(r).astype(np.int64)
-        k += self.rng.random(k.shape[0]) < (r - k)  # randomized rounding
-        k = np.minimum(k, local_deg)
+        k += rng.random(k.shape[0]) < (r - k)  # randomized rounding
+        if replace:
+            k = np.where(local_deg > 0, k, 0)
+        else:
+            k = np.minimum(k, local_deg)
 
         self.stats.requests += 1
         self.stats.seeds += int(seeds_gid.shape[0])
@@ -184,19 +262,29 @@ class SamplingServer:
             # adjacency-slice walk: O(local_deg) per seed
             self.stats.work_units += float(local_deg.sum()) + seeds_gid.shape[0]
 
-        # vectorized k-of-n per seed: draw one uniform key per local edge
-        # slot, keep each seed's k smallest — distribution-identical to
-        # Algorithm D (uniform without replacement); the *cost model* above
-        # still charges O(k) per the paper's design
         sel = k > 0
         if not sel.any():
             return (np.zeros(0, np.int64),) * 3
-        slots, seg = self._flatten_slices(starts[sel], local_deg[sel])
-        u = self.rng.random(slots.shape[0])
-        order = np.lexsort((u, seg))
-        seg_s, slots_s = seg[order], slots[order]
-        keep = _group_rank(seg_s) < k[sel][seg_s]
-        seg_k, slots_k = seg_s[keep], slots_s[keep]
+        if replace:
+            # each slot an independent uniform draw over the local neighbors
+            ksel = k[sel]
+            seg_k = np.repeat(np.arange(ksel.shape[0], dtype=np.int64), ksel)
+            ld = local_deg[sel][seg_k]
+            offs = np.minimum(
+                (rng.random(seg_k.shape[0]) * ld).astype(np.int64), ld - 1
+            )
+            slots_k = starts[sel][seg_k] + offs
+        else:
+            # vectorized k-of-n per seed: draw one uniform key per local edge
+            # slot, keep each seed's k smallest — distribution-identical to
+            # Algorithm D (uniform without replacement); the *cost model*
+            # above still charges O(k) per the paper's design
+            slots, seg = self._flatten_slices(starts[sel], local_deg[sel])
+            u = rng.random(slots.shape[0])
+            order = np.lexsort((u, seg))
+            seg_s, slots_s = seg[order], slots[order]
+            keep = _group_rank(seg_s) < k[sel][seg_s]
+            seg_k, slots_k = seg_s[keep], slots_s[keep]
         s = seeds_gid[sel][seg_k]
         n = p.local_to_global(nbr[slots_k])
         e = self._eid_global(
@@ -208,8 +296,14 @@ class SamplingServer:
 
     # -- WeightedGatherOp (Alg. 3) -------------------------------------------
     def weighted_gather(
-        self, seeds_gid: np.ndarray, fanout: int, direction: str = DEFAULT_DIRECTION
+        self,
+        seeds_gid: np.ndarray,
+        fanout: int,
+        direction: str = DEFAULT_DIRECTION,
+        *,
+        rng: np.random.Generator | None = None,
     ):
+        rng = self.rng if rng is None else rng
         p = self.part
         assert p.edge_weights is not None, "graph has no edge weights"
         lids = p.global_to_local(seeds_gid)
@@ -239,7 +333,7 @@ class SamplingServer:
             )
         eids = slots if eid_of_slot is None else eid_of_slot[slots]
         w = p.edge_weights[eids].astype(np.float64)
-        u = self.rng.random(slots.shape[0])
+        u = rng.random(slots.shape[0])
         with np.errstate(divide="ignore", invalid="ignore"):
             scores = np.where(w > 0, u ** (1.0 / np.maximum(w, 1e-300)), 0.0)
         order = np.lexsort((-scores, seg))
@@ -287,7 +381,115 @@ class SampledSubgraph:
 
 
 # ---------------------------------------------------------------------------
-# Clients
+# Request plan
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class SamplingSpec:
+    """A validated, typed description of one K-hop sampling plan — replaces
+    the ``fanouts/weighted/direction`` kwarg forest on every surface."""
+
+    fanouts: tuple = (10, 5)
+    weighted: bool = False  # A-ES weighted sampling instead of uniform
+    direction: str = DEFAULT_DIRECTION
+    # with-replacement uniform draws (each slot independent); weighted A-ES
+    # is inherently without replacement
+    replace: bool = False
+
+    def validate(self) -> "SamplingSpec":
+        if not self.fanouts or any(f <= 0 for f in self.fanouts):
+            raise ValueError(f"fanouts must be positive, got {self.fanouts!r}")
+        if self.direction not in ("out", "in"):
+            raise ValueError(
+                f"direction must be 'out' or 'in', got {self.direction!r}"
+            )
+        if self.weighted and self.replace:
+            raise ValueError(
+                "replace=True is uniform-only: weighted A-ES sampling is "
+                "inherently without replacement"
+            )
+        return self
+
+
+@dataclass(frozen=True)
+class SampleRequest:
+    """One K-hop request: seeds + plan + the RNG stream key.
+
+    ``key`` (a tuple of ints) names the request's deterministic random
+    stream: the result is a pure function of ``(service seed, key, seeds,
+    spec)``.  Two requests MAY share a key — e.g. identically-seeded loaders
+    on a shared service reuse the same key sequence and therefore reproduce
+    the exact streams they would see on private services."""
+
+    seeds: np.ndarray
+    spec: SamplingSpec
+    key: tuple = (0,)
+
+
+def _norm_key(key) -> tuple:
+    if isinstance(key, (int, np.integer)):
+        key = (int(key),)
+    if isinstance(key, (str, bytes)):
+        raise TypeError(
+            f"request key must be an int or a tuple of ints, got {key!r}"
+        )
+    try:
+        out = tuple(int(k) & _KEY_MASK for k in key)
+    except (TypeError, ValueError):
+        raise TypeError(
+            f"request key must be an int or a tuple of ints, got {key!r}"
+        ) from None
+    if not out:
+        raise ValueError("request key must not be empty")
+    return out
+
+
+class _RequestState:
+    __slots__ = ("request", "result", "frontier", "hop", "done", "cancelled")
+
+    def __init__(self, request: SampleRequest):
+        self.request = request
+        self.result = SampledSubgraph(seeds=request.seeds)
+        self.frontier = request.seeds
+        self.hop = 0
+        self.done = False
+        self.cancelled = False
+
+
+class SampleTicket:
+    """Future-like handle for a submitted request.  ``result()`` drives the
+    service's cooperative scheduler until this request completes — every
+    other in-flight request advances alongside it, one hop per round."""
+
+    def __init__(self, service: "SamplingService", state: _RequestState):
+        self._service = service
+        self._state = state
+
+    @property
+    def request(self) -> SampleRequest:
+        return self._state.request
+
+    def done(self) -> bool:
+        return self._state.done
+
+    def cancel(self) -> None:
+        """Withdraw an unfinished request so abandoned tickets stop
+        consuming scheduler rounds and skewing workload counters."""
+        self._service._cancel(self._state)
+
+    def result(self) -> SampledSubgraph:
+        if self._state.cancelled:
+            raise RuntimeError("sample request was cancelled")
+        while not self._state.done:
+            self._service._advance_round()
+        if self._state.cancelled:
+            raise RuntimeError("sample request was cancelled")
+        return self._state.result
+
+
+# ---------------------------------------------------------------------------
+# Shared hop executor
 # ---------------------------------------------------------------------------
 
 
@@ -337,21 +539,350 @@ def _topk_by_score(
     return seed_arr[keep], nbr_arr[keep], eid_arr[keep]
 
 
-class GatherApplyClient:
-    """GLISP client: Gather from all hosting servers, Apply merge (Alg. 1)."""
+def _chunked(arr: np.ndarray, max_batch: int) -> list[np.ndarray]:
+    """Split one per-server seed batch into dispatch-sized chunks.  Chunks
+    partition the (unique) batch, so per-seed semantics are untouched."""
+    n = arr.shape[0]
+    if n == 0:
+        return []
+    if max_batch <= 0 or n <= max_batch:
+        return [arr]
+    return [arr[i : i + max_batch] for i in range(0, n, max_batch)]
+
+
+def execute_hop(
+    servers: list[SamplingServer],
+    routed: list[np.ndarray],
+    fanout: int,
+    *,
+    weighted: bool = False,
+    replace: bool = False,
+    direction: str = DEFAULT_DIRECTION,
+    merge: bool = True,
+    trim_rng: np.random.Generator | None = None,
+    rng_for=None,
+    max_server_batch: int = 0,
+    on_dispatch=None,
+):
+    """One hop for one request: per-server (chunked) gathers + optional Apply.
+
+    The ONE gather/merge loop shared by the blocking clients and the async
+    service.  ``merge=True`` is the Gather-Apply path (vertex-cut: join all
+    hosts' partials, trim/top-f globally); ``merge=False`` is the owner-routed
+    path, where each server's answer is already complete — weighted results
+    get the per-server top-f (identical to the global top-f, since every
+    neighbor is local to one server) and uniform results need no trim
+    (local_deg == global_deg makes randomized rounding exact).
+
+    ``rng_for(part_id, chunk_idx)`` supplies per-dispatch RNG streams (the
+    service's per-request keying); ``None`` uses each server's shared stream.
+    ``on_dispatch(part_id, chunk)`` observes every dispatched chunk (the
+    service's coalescing accountant).
+    """
+    parts_s, parts_n, parts_x, parts_e = [], [], [], []
+    for p, (srv, sub) in enumerate(zip(servers, routed)):
+        for ci, chunk in enumerate(_chunked(sub, max_server_batch)):
+            rng = rng_for(p, ci) if rng_for is not None else None
+            if on_dispatch is not None:
+                on_dispatch(p, chunk)
+            if weighted:
+                s, n, sc, e = srv.weighted_gather(chunk, fanout, direction, rng=rng)
+                if merge:
+                    parts_x.append(sc)
+                else:
+                    s, n, e = _topk_by_score(s, n, e, sc, fanout)
+            else:
+                s, n, e = srv.uniform_gather(
+                    chunk, fanout, direction, rng=rng, replace=replace
+                )
+            parts_s.append(s)
+            parts_n.append(n)
+            parts_e.append(e)
+    if not parts_s:
+        z = np.zeros(0, np.int64)
+        return z, z, z
+    s = np.concatenate(parts_s)
+    n = np.concatenate(parts_n)
+    e = np.concatenate(parts_e)
+    if merge:
+        if weighted:
+            s, n, e = _topk_by_score(s, n, e, np.concatenate(parts_x), fanout)
+        else:
+            s, n, e = _trim_uniform(s, n, e, fanout, trim_rng)
+    return s, n, e
+
+
+# ---------------------------------------------------------------------------
+# The asynchronous request-plan service
+# ---------------------------------------------------------------------------
+
+
+class SamplingService:
+    """The shared, concurrent, schedulable sampling tier.
+
+    Owns the servers and a routing strategy; clients submit requests and
+    read tickets:
+
+        service = SamplingService(servers, GatherApplyRouting(router))
+        t1 = service.submit(seeds_a, spec)
+        t2 = service.submit(seeds_b, spec)      # in flight alongside t1
+        sub_a, sub_b = t1.result(), t2.result()
+
+    Scheduling: each round advances EVERY in-flight request by one hop, so
+    concurrent requests overlap hop levels.  Within a round the service
+
+    - **coalesces** duplicate frontier seeds across requests: each unique
+      (server, seed) pair is charged the per-seed request overhead once and
+      the round's dispatch count reflects the deduplicated batches (actual
+      sample draws stay per-request so results are bit-exact regardless of
+      what else is in flight);
+    - **splits** per-server batches larger than ``max_server_batch`` into
+      separate dispatches, bounding per-dispatch response size so one huge
+      request cannot monopolize a server's queue ahead of other requests'
+      chunks.
+
+    Work model: ``parallel_work`` accumulates the per-round MAX of the
+    per-server work deltas (servers run concurrently; requests sharing a
+    round overlap), ``total_work`` the sum.  The blocking clients charge one
+    round per request-hop; overlapping in-flight requests therefore lowers
+    modeled parallel latency — the request-level load-balancing win the
+    paper's service design targets.
+
+    Determinism contract: a request's result is a pure function of
+    ``(service seed, request.key, seeds, spec, max_server_batch)`` —
+    invariant to submission order, interleaving, coalescing, and the number
+    of concurrent clients.
+    """
 
     def __init__(
         self,
         servers: list[SamplingServer],
-        router: VertexRouter,
+        routing,
+        *,
         seed: int = 0,
+        coalesce: bool = True,
+        max_server_batch: int = 0,
     ):
         self.servers = servers
-        self.router = router
-        self.rng = np.random.default_rng(seed)
+        self.routing = routing
+        self.seed = int(seed) & _KEY_MASK
+        self.coalesce = coalesce
+        self.max_server_batch = int(max_server_batch)
         # eids are only meaningful when EVERY server can map to global ids
         # (partitions persisted before edge_global_id existed return local
         # slots, which must not be mistaken for global edge ids)
+        self.has_global_eids = all(
+            s.part.edge_global_id is not None for s in servers
+        )
+        self.parallel_work = 0.0
+        self.total_work = 0.0
+        self._inflight: list[_RequestState] = []
+        self._auto_key = 0
+        # rounds are serialized: concurrent consumers (e.g. a thread-mode
+        # prefetch producer beside a foreground sample call) never advance
+        # the same request twice; per-request RNG keys keep every result
+        # bit-identical no matter which thread drives the round
+        self._lock = threading.RLock()
+
+    # -- submission ----------------------------------------------------
+    def submit(
+        self,
+        request,
+        spec: SamplingSpec | None = None,
+        *,
+        key=None,
+    ) -> SampleTicket:
+        """Submit a ``SampleRequest`` (or ``(seeds, spec)``) for sampling.
+
+        ``key`` names the request's RNG stream (see ``SampleRequest``);
+        omitted keys draw from the service's own monotonic counter."""
+        if isinstance(request, SampleRequest):
+            if spec is not None:
+                raise ValueError("pass spec inside the SampleRequest")
+            seeds, spec = request.seeds, request.spec
+            key = request.key if key is None else key
+        else:
+            seeds = request
+            if spec is None:
+                raise ValueError("submit(seeds, ...) requires a SamplingSpec")
+        spec.validate()
+        with self._lock:
+            if key is None:
+                key = (self._auto_key,)
+                self._auto_key += 1
+            req = SampleRequest(
+                seeds=np.unique(np.asarray(seeds, dtype=np.int64)),
+                spec=spec,
+                key=_norm_key(key),
+            )
+            state = _RequestState(req)
+            self._inflight.append(state)
+        return SampleTicket(self, state)
+
+    def inflight(self) -> int:
+        return len(self._inflight)
+
+    def drain(self) -> None:
+        """Run rounds until no request is in flight."""
+        while self._inflight:
+            self._advance_round()
+
+    # -- blocking shims (one release of deprecation) -------------------
+    def sample_khop(
+        self,
+        seeds: np.ndarray,
+        fanouts,
+        weighted: bool = False,
+        direction: str = DEFAULT_DIRECTION,
+    ) -> SampledSubgraph:
+        """DEPRECATED submit-and-wait shim over :meth:`submit` (kept one
+        release so legacy client call sites keep working)."""
+        spec = SamplingSpec(
+            fanouts=tuple(fanouts), weighted=weighted, direction=direction
+        )
+        return self.submit(seeds, spec).result()
+
+    # -- stats ---------------------------------------------------------
+    @property
+    def router(self) -> VertexRouter:
+        router = getattr(self.routing, "router", None)
+        if router is None:
+            raise AttributeError(
+                f"{type(self.routing).__name__} routing has no VertexRouter "
+                "(owner-routed services expose .routing.owner instead)"
+            )
+        return router
+
+    def stats(self) -> ServerStats:
+        """Service-level aggregate: per-server counters merged into one."""
+        merged = ServerStats()
+        for srv in self.servers:
+            merged.merge(srv.stats)
+        return merged
+
+    def server_workloads(self) -> np.ndarray:
+        return np.array([s.stats.work_units for s in self.servers])
+
+    def reset_stats(self) -> None:
+        for s in self.servers:
+            s.stats = ServerStats()
+        self.parallel_work = 0.0
+        self.total_work = 0.0
+
+    def __repr__(self) -> str:
+        return (
+            f"SamplingService(servers={len(self.servers)}, "
+            f"routing={type(self.routing).__name__}, "
+            f"inflight={len(self._inflight)})"
+        )
+
+    # -- scheduler -----------------------------------------------------
+    def _rng(self, key: tuple, hop: int, *tail: int) -> np.random.Generator:
+        # length-prefixed entropy: keys of different lengths never alias
+        seq = np.random.SeedSequence(
+            (self.seed, len(key), *key, hop, *tail)
+        )
+        return np.random.default_rng(seq)
+
+    def _cancel(self, state: _RequestState) -> None:
+        with self._lock:
+            if state.done:
+                return
+            state.done = True
+            state.cancelled = True
+            if state in self._inflight:
+                self._inflight.remove(state)
+
+    def _advance_round(self) -> None:
+        """One scheduling round: every in-flight request advances one hop."""
+        with self._lock:
+            active = list(self._inflight)
+            if not active:
+                return
+            w0 = [srv.stats.work_units for srv in self.servers]
+            log: list[list[np.ndarray]] = [[] for _ in self.servers]
+
+            def on_dispatch(p, chunk):
+                log[p].append(chunk)
+
+            for st in active:
+                self._execute_hop(st, on_dispatch)
+            if self.coalesce:
+                self._coalesce_credit(log)
+            deltas = [
+                srv.stats.work_units - w for srv, w in zip(self.servers, w0)
+            ]
+            self.parallel_work += max(deltas) if deltas else 0.0
+            self.total_work += sum(deltas)
+            self._inflight = [st for st in self._inflight if not st.done]
+
+    def _execute_hop(self, st: _RequestState, on_dispatch) -> None:
+        spec = st.request.spec
+        key = st.request.key
+        hop = st.hop
+        s, n, e = execute_hop(
+            self.servers,
+            self.routing.route(st.frontier),
+            spec.fanouts[hop],
+            weighted=spec.weighted,
+            replace=spec.replace,
+            direction=spec.direction,
+            merge=self.routing.merge,
+            trim_rng=self._rng(key, hop, _TRIM_TAG),
+            rng_for=lambda p, ci: self._rng(key, hop, p, ci, _GATHER_TAG),
+            max_server_batch=self.max_server_batch,
+            on_dispatch=on_dispatch,
+        )
+        st.result.hops.append(
+            SampledHop(src=s, dst=n, eid=e if self.has_global_eids else None)
+        )
+        st.hop += 1
+        st.frontier = np.unique(n)
+        if st.hop >= len(spec.fanouts) or st.frontier.shape[0] == 0:
+            st.done = True
+
+    def _coalesce_credit(self, log: list[list[np.ndarray]]) -> None:
+        """Rebate the duplicated dispatch overhead within one round.
+
+        Draw work stays per-request (per-request RNG streams must actually
+        run), but a seed dispatched to the same server by several in-flight
+        requests is one service-level request: the per-seed handling
+        overhead and the dispatch count are charged for the deduplicated
+        batch only.  Results are untouched — coalescing on/off is
+        bit-equivalent; only the workload model changes."""
+        m = self.max_server_batch
+        for srv, arrs in zip(self.servers, log):
+            if len(arrs) <= 1:
+                continue
+            # only seeds the server actually hosts were charged
+            present = [a[srv.part.global_to_local(a) >= 0] for a in arrs]
+            charged = [a for a in present if a.shape[0]]
+            if len(charged) <= 1:
+                continue
+            total = sum(a.shape[0] for a in charged)
+            uniq = int(np.unique(np.concatenate(charged)).shape[0])
+            dup = total - uniq
+            srv.stats.seeds -= dup
+            srv.stats.work_units -= dup
+            fair = 1 if m <= 0 else -(-uniq // m)  # ceil
+            srv.stats.requests -= len(charged) - min(len(charged), fair)
+
+
+# ---------------------------------------------------------------------------
+# Legacy blocking clients (thin wrappers over the shared hop executor)
+# ---------------------------------------------------------------------------
+
+
+class _BlockingClient:
+    """Shared K-hop loop for the legacy blocking clients: route, execute the
+    hop through the one shared executor, account one scheduling round per
+    request-hop (no overlap — exactly the pre-service behavior)."""
+
+    routing = None  # set by subclasses
+
+    def _init_common(self, servers: list[SamplingServer], seed: int) -> None:
+        self.servers = servers
+        self.rng = np.random.default_rng(seed)
         self.has_global_eids = all(
             s.part.edge_global_id is not None for s in servers
         )
@@ -372,36 +903,21 @@ class GatherApplyClient:
         result = SampledSubgraph(seeds=seeds)
         frontier = seeds
         for f in fanouts:
-            routed = self.router.servers_of(frontier)
-            parts_s, parts_n, parts_x, parts_e = [], [], [], []
             w0 = [srv.stats.work_units for srv in self.servers]
-            for srv, sub in zip(self.servers, routed):
-                if sub.shape[0] == 0:
-                    continue
-                if weighted:
-                    s, n, sc, e = srv.weighted_gather(sub, f, direction)
-                    parts_x.append(sc)
-                else:
-                    s, n, e = srv.uniform_gather(sub, f, direction)
-                parts_s.append(s)
-                parts_n.append(n)
-                parts_e.append(e)
+            s, n, e = execute_hop(
+                self.servers,
+                self.routing.route(frontier),
+                f,
+                weighted=weighted,
+                direction=direction,
+                merge=self.routing.merge,
+                trim_rng=self.rng,
+            )
             deltas = [
                 srv.stats.work_units - w for srv, w in zip(self.servers, w0)
             ]
             self.parallel_work += max(deltas) if deltas else 0.0
             self.total_work += sum(deltas)
-            if parts_s:
-                s = np.concatenate(parts_s)
-                n = np.concatenate(parts_n)
-                e = np.concatenate(parts_e)
-                if weighted:
-                    sc = np.concatenate(parts_x)
-                    s, n, e = _topk_by_score(s, n, e, sc, f)
-                else:
-                    s, n, e = _trim_uniform(s, n, e, f, self.rng)
-            else:
-                s = n = e = np.zeros(0, np.int64)
             result.hops.append(
                 SampledHop(src=s, dst=n, eid=e if self.has_global_eids else None)
             )
@@ -416,9 +932,25 @@ class GatherApplyClient:
     def reset_stats(self) -> None:
         for s in self.servers:
             s.stats = ServerStats()
+        self.parallel_work = 0.0
+        self.total_work = 0.0
 
 
-class EdgeCutClient(GatherApplyClient):
+class GatherApplyClient(_BlockingClient):
+    """GLISP client: Gather from all hosting servers, Apply merge (Alg. 1)."""
+
+    def __init__(
+        self,
+        servers: list[SamplingServer],
+        router: VertexRouter,
+        seed: int = 0,
+    ):
+        self._init_common(servers, seed)
+        self.routing = GatherApplyRouting(router)
+        self.router = router
+
+
+class EdgeCutClient(_BlockingClient):
     """DistDGL-style baseline: one-hop request of v is answered ONLY by
     owner(v); the halo (replicated cut edges) makes it local.  Built over the
     same server implementation, but routing is by vertex owner, the local
@@ -431,53 +963,6 @@ class EdgeCutClient(GatherApplyClient):
         vertex_owner: np.ndarray,
         seed: int = 0,
     ):
-        self.servers = servers
+        self._init_common(servers, seed)
+        self.routing = OwnerRouting(vertex_owner, len(servers))
         self.owner = vertex_owner
-        self.rng = np.random.default_rng(seed)
-        self.has_global_eids = all(
-            s.part.edge_global_id is not None for s in servers
-        )
-        self.parallel_work = 0.0
-        self.total_work = 0.0
-
-    def sample_khop(
-        self,
-        seeds: np.ndarray,
-        fanouts: list[int],
-        weighted: bool = False,
-        direction: str = DEFAULT_DIRECTION,
-    ) -> SampledSubgraph:
-        seeds = np.unique(np.asarray(seeds, dtype=np.int64))
-        result = SampledSubgraph(seeds=seeds)
-        frontier = seeds
-        for f in fanouts:
-            parts_s, parts_n, parts_e = [], [], []
-            owners = self.owner[frontier]
-            w0 = [srv.stats.work_units for srv in self.servers]
-            for p, srv in enumerate(self.servers):
-                sub = frontier[owners == p]
-                if sub.shape[0] == 0:
-                    continue
-                if weighted:
-                    s, n, sc, e = srv.weighted_gather(sub, f, direction)
-                    s, n, e = _topk_by_score(s, n, e, sc, f)
-                else:
-                    s, n, e = srv.uniform_gather(sub, f, direction)
-                parts_s.append(s)
-                parts_n.append(n)
-                parts_e.append(e)
-            deltas = [
-                srv.stats.work_units - w for srv, w in zip(self.servers, w0)
-            ]
-            self.parallel_work += max(deltas) if deltas else 0.0
-            self.total_work += sum(deltas)
-            s = np.concatenate(parts_s) if parts_s else np.zeros(0, np.int64)
-            n = np.concatenate(parts_n) if parts_n else np.zeros(0, np.int64)
-            e = np.concatenate(parts_e) if parts_e else np.zeros(0, np.int64)
-            result.hops.append(
-                SampledHop(src=s, dst=n, eid=e if self.has_global_eids else None)
-            )
-            frontier = np.unique(n)
-            if frontier.shape[0] == 0:
-                break
-        return result

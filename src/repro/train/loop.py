@@ -43,7 +43,7 @@ class GNNTrainer:
     def __init__(
         self,
         model: GNNModel,
-        client,  # SamplerBackend, GatherApplyClient or EdgeCutClient
+        client,  # SamplerBackend, SamplingService, or a raw blocking client
         g,
         fanouts,
         train_ids: np.ndarray,
@@ -53,6 +53,8 @@ class GNNTrainer:
         seed: int = 0,
         weighted: bool = False,
         prefetch: int = 0,
+        inflight: int = 1,  # in-flight sample requests on the service
+        spec=None,  # SamplingSpec; overrides fanouts/weighted/direction
         worker_cores: tuple | None = None,
         partition_of: np.ndarray | None = None,
         balance_partitions: bool = False,
@@ -60,8 +62,6 @@ class GNNTrainer:
         self.model = model
         self.client = client
         self.g = g
-        self.fanouts = fanouts
-        self.direction = direction
         self.pipeline = BatchPipeline(
             client,
             g,
@@ -69,14 +69,18 @@ class GNNTrainer:
             fanouts,
             model.num_layers,
             batch_size=batch_size,
+            spec=spec,
             weighted=weighted,
             direction=direction,
             prefetch=prefetch,
+            inflight=inflight,
             worker_cores=worker_cores,
             seed=seed,
             partition_of=partition_of,
             balance_partitions=balance_partitions,
         )
+        self.fanouts = self.pipeline.fanouts
+        self.direction = self.pipeline.direction
         self.loader = self.pipeline.loader
         self.opt_cfg = opt or AdamWConfig(lr=1e-3, weight_decay=1e-4)
         self.params = model.init(jax.random.PRNGKey(seed))
