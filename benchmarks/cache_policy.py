@@ -1,31 +1,46 @@
-"""Paper Fig. 15: (a) interior-vertex percentage under AdaDNE across
-datasets; (b) LRU vs FIFO dynamic-cache hit ratio."""
+"""Paper Fig. 15 + the tiered storage sweep.
+
+Four measurements:
+
+- **fig15a** — interior-vertex percentage under AdaDNE across datasets.
+- **fig15b** — LRU vs FIFO dynamic-cache hit ratio through the layerwise
+  engine (the historic figure, now via the ``HybridCache`` stack).
+- **sweep** — tier configurations × eviction policies through the engine:
+  per-tier hit ratios, DFS fill chunks and the modeled ``IOCost`` rollup
+  for each ``storage_tiers``/``tier_capacities``/``cache_policy`` combo.
+- **trace** — a PDS-reordered access trace (contiguous active-partition
+  window + one-shot far boundary chunks, the §III-D reuse pattern): the
+  locality-aware policy must beat FIFO's modeled retrieval time, asserted
+  so CI catches a regression.
+
+Results land in ``BENCH_cache.json`` (``--out``); ``--smoke`` shrinks the
+workload for CI (mirroring ``BENCH_inference.json`` / ``BENCH_sampling.json``).
+"""
 from __future__ import annotations
 
+import argparse
+import json
 import tempfile
 
 import numpy as np
 
 from benchmarks.common import dataset, emit, glisp_client, partition
 from repro.core.inference import LayerwiseInferenceEngine
-from repro.core.inference.cache import CachePolicy
+from repro.core.storage import DFSTier, HybridCache, IOCost, build_tiers
 from repro.graph import build_partitions
+
+RESULTS: dict = {}
 
 CASES = [("ogbn-products", 2), ("wikikg90m", 4), ("twitter-2010", 4)]
 
 
-def run():
-    for ds, parts in CASES:
-        g = dataset(ds, scale=1.0)
-        ep, _ = partition(g, "AdaDNE", parts)
-        built = build_partitions(g, ep, parts)
-        interior = np.concatenate([p.interior_mask() for p in built])
-        emit(f"fig15a/{ds}/interior_pct", 100.0 * interior.mean())
+def _emit(name: str, value: float) -> None:
+    RESULTS[name] = float(value)
+    emit(name, value)
 
-    g = dataset("wikikg90m", scale=1.0, feat_dim=32)
-    client = glisp_client(g, 4)
-    rng = np.random.default_rng(0)
-    W = rng.standard_normal((64, 32)).astype(np.float32) * 0.3
+
+def _layer(rng, fdim: int, out: int):
+    W = rng.standard_normal((2 * fdim, out)).astype(np.float32) * 0.3
 
     def layer(k, h_self, h_nbr, seg):
         agg = np.zeros_like(h_self)
@@ -33,16 +48,116 @@ def run():
             np.add.at(agg, seg, h_nbr)
         return np.tanh(np.concatenate([h_self, agg], 1) @ W)
 
-    for policy in (CachePolicy.LRU, CachePolicy.FIFO):
+    return layer
+
+
+def bench_fig15a(scale: float) -> None:
+    for ds, parts in CASES:
+        g = dataset(ds, scale=scale)
+        ep, _ = partition(g, "AdaDNE", parts)
+        built = build_partitions(g, ep, parts)
+        interior = np.concatenate([p.interior_mask() for p in built])
+        _emit(f"fig15a/{ds}/interior_pct", 100.0 * interior.mean())
+
+
+def bench_engine_sweep(scale: float) -> None:
+    """Tier stacks × policies through the layerwise engine (fig15b is the
+    two-policy slice of this sweep)."""
+    g = dataset("wikikg90m", scale=scale, feat_dim=32)
+    client = glisp_client(g, 4)
+    layer = _layer(np.random.default_rng(0), 32, 32)
+    cost = IOCost()
+    sweep = [
+        ("mem_disk", ("memory", "disk"), (), "fifo"),
+        ("mem_disk", ("memory", "disk"), (), "lru"),
+        ("mem_disk", ("memory", "disk"), (), "locality"),
+        ("disk_only", ("disk",), (), "fifo"),
+        ("mem_cap8_disk", ("memory", "disk"), (8, 0), "fifo"),
+        ("mem_cap8_disk", ("memory", "disk"), (8, 0), "locality"),
+    ]
+    for stack_name, tiers, caps, policy in sweep:
         with tempfile.TemporaryDirectory() as td:
-            eng = LayerwiseInferenceEngine(
+            res = LayerwiseInferenceEngine(
                 g, client, [layer], g.vertex_feats, td, fanouts=[10],
                 chunk_rows=256, out_dims=[32], reorder_alg="PDS",
                 batch_size=128, dynamic_frac=0.30, policy=policy,
+                storage_tiers=tiers, tier_capacities=caps,
+            ).run()
+        key = f"sweep/{stack_name}/{policy}"
+        _emit(f"{key}/hit_ratio", res.dynamic_hit_ratio())
+        _emit(f"{key}/fill_chunks",
+              sum(s.cache.fill_chunks for s in res.layer_stats))
+        _emit(f"{key}/modeled_io_ms", res.modeled_io_ms(cost))
+        if stack_name == "mem_disk" and policy in ("fifo", "lru"):
+            _emit(f"fig15b/{policy}/hit_ratio", res.dynamic_hit_ratio())
+
+
+def bench_pds_trace(num_chunks: int, repeats: int) -> None:
+    """The acceptance trace: after the PDS reorder the active partition is a
+    contiguous chunk window re-swept while far boundary chunks stream
+    through once each.  Locality-aware eviction must keep the window hot
+    and beat FIFO's modeled retrieval time."""
+    chunk_rows, dim = 64, 8
+    window = max(2, num_chunks // 8)  # active partition chunks [0, window)
+    capacity = window + 1
+    far = list(range(num_chunks // 2, num_chunks))
+    trace: list[int] = []
+    for i in range(len(far) * repeats):
+        trace += list(range(window)) + [far[(i * 7) % len(far)]]
+    trace += list(range(window))
+    cost = IOCost()
+    modeled = {}
+    for policy in ("fifo", "lru", "locality"):
+        with tempfile.TemporaryDirectory() as td:
+            store = DFSTier(td, num_chunks * chunk_rows, dim, chunk_rows)
+            store.write_rows(
+                np.arange(store.num_rows),
+                np.zeros((store.num_rows, dim), np.float32),
             )
-            res = eng.run()
-        emit(f"fig15b/{policy.value}/hit_ratio", res.dynamic_hit_ratio())
+            cache = HybridCache(
+                store,
+                build_tiers(
+                    ("memory", "disk"), chunk_rows, dim,
+                    capacities=(capacity, 0),
+                ),
+                policy=policy,
+            )
+            cache.fill(
+                cache.plan_fill(
+                    np.arange(store.num_rows),
+                    focus_rows=np.arange(window * chunk_rows),
+                )
+            )
+            for c in trace:
+                cache.read_rows(np.arange(c * chunk_rows, c * chunk_rows + 4))
+            modeled[policy] = cache.stats.modeled_time_ms(cost)
+            _emit(f"trace/{policy}/modeled_io_ms", modeled[policy])
+            _emit(f"trace/{policy}/dynamic_hit_ratio",
+                  cache.stats.dynamic_hit_ratio)
+    _emit("trace/locality_speedup_vs_fifo",
+          modeled["fifo"] / modeled["locality"])
+    assert modeled["locality"] < modeled["fifo"], (
+        f"locality policy must beat fifo on the PDS trace: {modeled}"
+    )
+
+
+def run(smoke: bool = False, out_json: str | None = None) -> dict:
+    scale = 0.25 if smoke else 1.0
+    bench_fig15a(scale)
+    bench_engine_sweep(scale)
+    bench_pds_trace(
+        num_chunks=32 if smoke else 128, repeats=1 if smoke else 4
+    )
+    if out_json:
+        with open(out_json, "w") as f:
+            json.dump(RESULTS, f, indent=2, sort_keys=True)
+        print(f"wrote {out_json}")
+    return RESULTS
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny scale for CI")
+    ap.add_argument("--out", default="BENCH_cache.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_json=args.out)

@@ -1,9 +1,10 @@
 """Full-graph inference demo (paper §III-D): layerwise engine vs naive
 samplewise on the same trained model — reports the redundancy eliminated,
 chunk reads, dynamic-cache hit ratio, and modeled retrieval speedup of the
-two-level cache with each reorder algorithm.  The system (partitioner +
-sampling service) comes from the facade; the reorder algorithm is swapped
-per run through ``infer_layerwise(reorder=...)``.
+tiered ``HybridCache`` with each reorder algorithm and eviction policy.
+The system (partitioner + sampling service) comes from the facade; the
+reorder algorithm and cache policy are swapped per run through
+``infer_layerwise(reorder=..., cache_policy=...)``.
 
     PYTHONPATH=src python examples/layerwise_inference.py
 """
@@ -14,7 +15,7 @@ import numpy as np
 
 from repro.api import GLISPConfig, GLISPSystem
 from repro.core.inference import samplewise_inference
-from repro.core.inference.store import IOCost
+from repro.core.storage import IOCost
 from repro.graph import power_law_graph
 
 g = power_law_graph(12000, avg_degree=8, seed=1, feat_dim=32)
@@ -41,20 +42,24 @@ def make_layer(k):
 layers = [make_layer(0), make_layer(1)]
 cost = IOCost()
 
-print("reorder | chunk reads | dyn hit | modeled speedup vs raw DFS")
-for alg in ("NS", "DS", "PS", "PDS"):
+print("reorder | policy   | chunk reads | dyn hit | modeled speedup vs raw DFS")
+for alg, policy in (
+    ("NS", "fifo"), ("DS", "fifo"), ("PS", "fifo"),
+    ("PDS", "fifo"), ("PDS", "locality"),
+):
     with tempfile.TemporaryDirectory() as td:
         # numpy layer fns run through the vectorized gather without jit;
         # GNNModel.embed_layer_fn slices would additionally get the
         # shape-bucketed device-resident path (mode/jit/use_kernel knobs)
         res = system.infer_layerwise(
             layers, td, chunk_rows=512, out_dims=[32, 32],
-            reorder=alg, batch_size=512,
+            reorder=alg, cache_policy=policy, batch_size=512,
         )
     reads = res.total_chunk_reads() + sum(s.cache.fill_chunks for s in res.layer_stats)
     baseline = (res.total_chunk_reads() + res.total_dynamic_hits()) * cost.dfs_ms
     speedup = baseline / max(res.modeled_io_ms(cost), 1e-9)
-    print(f"{alg:7s} | {reads:11d} | {res.dynamic_hit_ratio():7.2%} | {speedup:6.2f}x")
+    print(f"{alg:7s} | {policy:8s} | {reads:11d} | "
+          f"{res.dynamic_hit_ratio():7.2%} | {speedup:6.2f}x")
 
 # redundancy vs samplewise on a slice
 targets = rng.choice(g.num_vertices, 1024, replace=False)

@@ -14,6 +14,7 @@ from repro.api.backends import (
     PARTITIONERS,
     REORDERS,
     SAMPLERS,
+    STORAGE_TIERS,
     EdgeCutBackend,
     GatherApplyBackend,
     PartitionPlan,
@@ -30,6 +31,16 @@ from repro.core.sampling.service import (
     SamplingService,
     SamplingSpec,
 )
+from repro.core.storage import (
+    ArrayFeatureSource,
+    DFSTier,
+    FeatureSource,
+    HybridCache,
+    IOCost,
+    StorageTier,
+    StoreFeatureSource,
+    as_feature_source,
+)
 
 __all__ = [
     "GLISPConfig",
@@ -44,9 +55,18 @@ __all__ = [
     "SampleRequest",
     "SampleTicket",
     "SamplingService",
+    "ArrayFeatureSource",
+    "DFSTier",
+    "FeatureSource",
+    "HybridCache",
+    "IOCost",
+    "StorageTier",
+    "StoreFeatureSource",
+    "as_feature_source",
     "PARTITIONERS",
     "SAMPLERS",
     "REORDERS",
     "CACHE_POLICIES",
+    "STORAGE_TIERS",
     "DEFAULT_DIRECTION",
 ]

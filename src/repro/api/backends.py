@@ -1,6 +1,7 @@
 """Pluggable components behind the GLISP facade.
 
-Defines the four registries named by ``GLISPConfig`` string fields and the
+Defines the registries named by ``GLISPConfig`` string fields (partitioners,
+samplers, reorders, cache policies, storage tiers) and the
 ``SamplerBackend`` protocol.  Since the request-plan redesign, BOTH sampler
 backends are one ``SamplingService`` behind different routing strategies
 (``GatherApplyRouting`` for GLISP, ``OwnerRouting`` for the DistDGL-style
@@ -22,7 +23,7 @@ from typing import TYPE_CHECKING, Protocol, runtime_checkable
 import numpy as np
 
 from repro.api.registry import Registry
-from repro.core.inference.cache import CachePolicy
+from repro.core.storage import CACHE_POLICIES, STORAGE_TIERS
 from repro.core.partition import (
     adadne,
     distributed_ne,
@@ -58,6 +59,7 @@ __all__ = [
     "SAMPLERS",
     "REORDERS",
     "CACHE_POLICIES",
+    "STORAGE_TIERS",
 ]
 
 
@@ -282,13 +284,11 @@ def _build_edge_cut(
 
 
 # ---------------------------------------------------------------------------
-# Reorder algorithms and cache policies (thin: validate + canonicalize)
+# Reorder algorithms (thin: validate + canonicalize).  Cache policies and
+# storage tiers re-export from the tiered storage subsystem
+# (``repro.core.storage``), which owns their registries.
 # ---------------------------------------------------------------------------
 
 REORDERS: Registry = Registry("reorder algorithm")
 for _alg in REORDER_ALGS:
     REORDERS.register(_alg, _alg)
-
-CACHE_POLICIES: Registry = Registry("cache policy")
-for _pol in CachePolicy:
-    CACHE_POLICIES.register(_pol.value, _pol)

@@ -57,9 +57,15 @@ class GLISPConfig:
     vertex_quantum: int = 256  # padding buckets for XLA static shapes
     edge_quantum: int = 1024
 
-    # -- layerwise inference -------------------------------------------------
+    # -- tiered storage ------------------------------------------------------
     reorder: str = "pds"  # ns | ds | ps | pds | bfs
-    cache_policy: str = "fifo"  # fifo | lru
+    cache_policy: str = "fifo"  # fifo | lru | locality (CACHE_POLICIES)
+    # cache tier stack fast→slow above the authoritative DFS store; names
+    # resolve in STORAGE_TIERS (memory | disk)
+    storage_tiers: tuple = ("memory", "disk")
+    # per-tier chunk budgets aligned with storage_tiers; missing/0 = auto
+    # (memory: dynamic_frac of the tier below; disk: unbounded)
+    tier_capacities: tuple = ()
     dynamic_frac: float = 0.10
     chunk_rows: int = 4096
     infer_batch_size: int = 4096
@@ -102,14 +108,42 @@ class GLISPConfig:
             SAMPLERS,
         )
 
+        from repro.core.storage import STORAGE_TIERS
+
         if not 1 <= self.num_parts <= MAX_PARTS:
             raise ValueError(
                 f"num_parts must be in [1, {MAX_PARTS}], got {self.num_parts}"
             )
         PARTITIONERS.get(self.partitioner)
         SAMPLERS.get(self.sampler)
-        REORDERS.get(self.reorder)
-        CACHE_POLICIES.get(self.cache_policy)
+        if self.reorder not in REORDERS:
+            raise ValueError(
+                f"reorder must be one of {REORDERS.names()}, "
+                f"got {self.reorder!r}"
+            )
+        if self.cache_policy not in CACHE_POLICIES:
+            raise ValueError(
+                f"cache_policy must be one of {CACHE_POLICIES.names()}, "
+                f"got {self.cache_policy!r}"
+            )
+        if not self.storage_tiers:
+            raise ValueError("storage_tiers must name at least one cache tier")
+        for name in self.storage_tiers:
+            if name not in STORAGE_TIERS:
+                raise ValueError(
+                    f"storage_tiers entries must be one of "
+                    f"{STORAGE_TIERS.names()}, got {name!r}"
+                )
+        if len(self.tier_capacities) > len(self.storage_tiers):
+            raise ValueError(
+                f"tier_capacities has {len(self.tier_capacities)} entries for "
+                f"{len(self.storage_tiers)} storage_tiers"
+            )
+        for cap in self.tier_capacities:
+            if cap < 0:
+                raise ValueError(
+                    f"tier_capacities entries must be >= 0 (0 = auto), got {cap}"
+                )
         self.sampling_spec().validate()
         if self.cost_model not in (None, "algd", "scan"):
             raise ValueError(
@@ -130,8 +164,10 @@ class GLISPConfig:
             v = getattr(self, name)
             if v < 0:
                 raise ValueError(f"{name} must be >= 0, got {v}")
-        if not 0.0 <= self.dynamic_frac <= 1.0:
-            raise ValueError(f"dynamic_frac must be in [0, 1], got {self.dynamic_frac}")
+        if not 0.0 < self.dynamic_frac <= 1.0:
+            raise ValueError(
+                f"dynamic_frac must be in (0, 1], got {self.dynamic_frac}"
+            )
         if self.infer_mode not in ("bucketed", "reference"):
             raise ValueError(
                 f"infer_mode must be 'bucketed' or 'reference', got {self.infer_mode!r}"
@@ -152,4 +188,6 @@ class GLISPConfig:
         d = dataclasses.asdict(self)
         d["fanouts"] = list(self.fanouts)
         d["infer_edge_buckets"] = list(self.infer_edge_buckets)
+        d["storage_tiers"] = list(self.storage_tiers)
+        d["tier_capacities"] = list(self.tier_capacities)
         return d

@@ -49,6 +49,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.sampling.service import DEFAULT_DIRECTION, SamplingSpec
+from repro.core.storage import as_feature_source
 from repro.data.graph_loader import SeedBatchLoader
 from repro.models.gnn.batching import GNNBatch, subgraph_to_batch
 from repro.utils import prefetch_iterator
@@ -82,6 +83,7 @@ class BatchPipeline:
         balance_partitions: bool = False,
         vertex_quantum: int = 256,
         edge_quantum: int = 1024,
+        feature_source=None,  # FeatureSource; None = graph.vertex_feats
     ):
         if workers not in ("auto", "process", "thread"):
             raise ValueError(
@@ -121,6 +123,12 @@ class BatchPipeline:
         self.worker_cores = worker_cores
         self.vertex_quantum = vertex_quantum
         self.edge_quantum = edge_quantum
+        # the training-side feature path: any FeatureSource (e.g. a
+        # disk-backed HybridCache) — batches are bit-identical to the
+        # in-memory matrix because the cache only changes where rows live
+        self.feature_source = as_feature_source(
+            graph.vertex_feats if feature_source is None else feature_source
+        )
         self.loader = SeedBatchLoader(
             seeds,
             batch_size,
@@ -168,7 +176,7 @@ class BatchPipeline:
         sub = self._take_sample(seeds)
         return subgraph_to_batch(
             sub,
-            self.graph.vertex_feats,
+            self.feature_source,
             self.graph.labels,
             self.num_layers,
             edge_types=self.graph.edge_types,

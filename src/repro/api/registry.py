@@ -1,5 +1,5 @@
 """String-keyed component registries: partitioners, sampler backends, reorder
-algorithms, cache policies.
+algorithms, cache policies, storage tiers.
 
 Every pluggable piece of the GLISP system is resolved by name through a
 ``Registry`` so configs stay plain data (``GLISPConfig`` fields are strings)
@@ -15,56 +15,14 @@ and downstream code extends the system without touching the facade:
 Unknown names raise ``ValueError`` listing what IS registered — the
 config-typo failure mode is a one-line fix instead of a silent KeyError deep
 in a build stack.
+
+The class itself lives in ``repro.utils`` (dependency-free) so core
+subsystems — e.g. the ``repro.core.storage`` cache-policy registry — can
+define registries without importing the API package; this module stays the
+canonical public import path.
 """
 from __future__ import annotations
 
-from typing import Callable, Generic, Iterator, TypeVar
-
-T = TypeVar("T")
+from repro.utils import Registry
 
 __all__ = ["Registry"]
-
-
-class Registry(Generic[T]):
-    """Case-insensitive name -> component map with decorator registration."""
-
-    def __init__(self, kind: str):
-        self.kind = kind
-        self._entries: dict[str, T] = {}
-
-    @staticmethod
-    def _key(name: str) -> str:
-        return name.strip().lower()
-
-    def register(self, name: str, obj: T | None = None):
-        """``REG.register("name", obj)`` or ``@REG.register("name")``."""
-        key = self._key(name)
-
-        def _add(o: T) -> T:
-            if key in self._entries:
-                raise ValueError(f"{self.kind} {name!r} already registered")
-            self._entries[key] = o
-            return o
-
-        return _add if obj is None else _add(obj)
-
-    def get(self, name: str) -> T:
-        key = self._key(name)
-        if key not in self._entries:
-            known = ", ".join(sorted(self._entries)) or "<none>"
-            raise ValueError(
-                f"unknown {self.kind} {name!r}; registered: {known}"
-            )
-        return self._entries[key]
-
-    def names(self) -> list[str]:
-        return sorted(self._entries)
-
-    def __contains__(self, name: str) -> bool:
-        return self._key(name) in self._entries
-
-    def __iter__(self) -> Iterator[str]:
-        return iter(sorted(self._entries))
-
-    def __len__(self) -> int:
-        return len(self._entries)

@@ -166,8 +166,13 @@ class GLISPSystem:
         fanouts=None,
         spec=None,
         inflight: int | None = None,
+        feature_source=None,
     ) -> BatchPipeline:
-        """A prefetching seed->batch pipeline over this system's service."""
+        """A prefetching seed->batch pipeline over this system's service.
+
+        ``feature_source`` (a ``repro.core.storage.FeatureSource``) swaps
+        the in-memory feature matrix for e.g. a disk-backed tiered store —
+        batches are bit-identical either way."""
         cfg = self.config
         partition_of = (
             self.plan.vertex_owner if cfg.balance_partitions else None
@@ -191,6 +196,7 @@ class GLISPSystem:
             balance_partitions=cfg.balance_partitions,
             vertex_quantum=cfg.vertex_quantum,
             edge_quantum=cfg.edge_quantum,
+            feature_source=feature_source,
         )
 
     # -- training ------------------------------------------------------
@@ -205,6 +211,7 @@ class GLISPSystem:
         worker_cores: tuple | None = None,
         spec=None,
         inflight: int | None = None,
+        feature_source=None,
     ):
         """A ``GNNTrainer`` wired to this system's backend and config."""
         from repro.train.loop import GNNTrainer  # lazy: avoids import cycle
@@ -228,6 +235,7 @@ class GLISPSystem:
                 self.plan.vertex_owner if cfg.balance_partitions else None
             ),
             balance_partitions=cfg.balance_partitions,
+            feature_source=feature_source,
         )
 
     def train(
@@ -265,6 +273,8 @@ class GLISPSystem:
         out_dims: list[int] | None = None,
         reorder: str | None = None,
         cache_policy: str | None = None,
+        storage_tiers: tuple | None = None,
+        tier_capacities: tuple | None = None,
         chunk_rows: int | None = None,
         dynamic_frac: float | None = None,
         batch_size: int | None = None,
@@ -301,6 +311,16 @@ class GLISPSystem:
             reorder_alg=REORDERS.get(reorder or cfg.reorder),
             chunk_rows=chunk_rows if chunk_rows is not None else cfg.chunk_rows,
             policy=CACHE_POLICIES.get(cache_policy or cfg.cache_policy),
+            storage_tiers=(
+                tuple(storage_tiers)
+                if storage_tiers is not None
+                else cfg.storage_tiers
+            ),
+            tier_capacities=(
+                tuple(tier_capacities)
+                if tier_capacities is not None
+                else cfg.tier_capacities
+            ),
             dynamic_frac=(
                 dynamic_frac if dynamic_frac is not None else cfg.dynamic_frac
             ),

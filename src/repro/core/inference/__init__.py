@@ -1,10 +1,18 @@
 from repro.core.inference.store import ChunkedEmbeddingStore, IOCost
-from repro.core.inference.cache import TwoLevelCache, CachePolicy
+from repro.core.inference.cache import TwoLevelCache, CachePolicy, CacheStats
 from repro.core.inference.engine import (
     LayerwiseInferenceEngine,
     samplewise_inference,
     assign_inference_owners,
     csr_gather,
+)
+# the tiered storage subsystem these shims now delegate to
+from repro.core.storage import (
+    DFSTier,
+    FeatureSource,
+    HybridCache,
+    StorageTier,
+    TierStats,
 )
 
 __all__ = [
@@ -12,6 +20,12 @@ __all__ = [
     "IOCost",
     "TwoLevelCache",
     "CachePolicy",
+    "CacheStats",
+    "DFSTier",
+    "FeatureSource",
+    "HybridCache",
+    "StorageTier",
+    "TierStats",
     "LayerwiseInferenceEngine",
     "samplewise_inference",
     "assign_inference_owners",

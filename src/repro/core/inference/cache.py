@@ -1,34 +1,39 @@
-"""Two-level embedding caching system (paper §III-D).
+"""DEPRECATED module — the caching system moved to ``repro.core.storage``.
 
-Level 1 — **static disk cache**: before each layer's inference, worker i
-pre-fills a local copy of every chunk row it will need: the embeddings of all
-vertices in partition i plus the (precomputed) out-of-partition sampled
-neighbors of its boundary vertices.  After the fill, every read is a local
-hit by construction (the paper's 100% hit-ratio guarantee).
+``TwoLevelCache`` survives as a thin shim over a two-tier
+:class:`repro.core.storage.HybridCache` (``memory`` → ``disk`` over the
+store), kept for one release of deprecation, mirroring the
+``backend.sample()`` playbook.  The accounting contract is unchanged:
 
-Level 2 — **dynamic memory cache**: chunk-granular FIFO (or LRU) over the
-static cache, capacity a fraction of the worker's chunk count; repeated
-accesses of nearby vertices (boosted by the PDS reorder) hit memory instead
-of disk.
+    fill_chunks   chunks fetched from DFS (static fill + demand misses)
+    static_reads  dynamic misses served by the static disk level
+    dynamic_hits  in-memory hits
 
-Accounting matches Fig. 14b / 15b: ``chunk_reads`` = reads that missed the
-dynamic cache (served by static disk), ``dynamic_hits`` = memory hits,
-``fill_chunks`` = chunks fetched from DFS during the fill phase.
+The historic fill-free bug — ``dynamic_capacity`` stuck at 0 so the dynamic
+tier evicted on every insert — is fixed by the hybrid cache's auto-sizing:
+capacity grows with the chunks admitted below, so LRU vs FIFO behave
+differently even without a ``fill_static`` call.
+
+New code should build a ``HybridCache`` directly (pluggable tiers and
+policies, including the PDS-locality-aware one).
 """
 from __future__ import annotations
 
-from collections import OrderedDict
 from dataclasses import dataclass
 from enum import Enum
 
 import numpy as np
 
-from repro.core.inference.store import ChunkedEmbeddingStore, IOCost, chunk_runs
+from repro.core.storage import HybridCache, IOCost, build_tiers
+from repro.core.storage.store import DFSTier
 
-__all__ = ["CachePolicy", "TwoLevelCache"]
+__all__ = ["CachePolicy", "CacheStats", "TwoLevelCache"]
 
 
 class CachePolicy(str, Enum):
+    """Legacy two-policy enum; the full set lives in
+    ``repro.core.storage.CACHE_POLICIES`` (fifo, lru, locality, ...)."""
+
     FIFO = "fifo"
     LRU = "lru"
 
@@ -57,59 +62,52 @@ class CacheStats:
         )
 
 
+class _LiveCacheStats(CacheStats):
+    """A ``CacheStats`` whose counters read through to a ``HybridCache``
+    live, so legacy code that keeps a reference to ``cache.stats`` and
+    reads it later keeps seeing current values."""
+
+    def __init__(self, hybrid: HybridCache):
+        self._hybrid = hybrid
+
+    fill_chunks = property(lambda self: self._hybrid.stats.fill_chunks)
+    static_reads = property(lambda self: self._hybrid.stats.static_reads)
+    dynamic_hits = property(lambda self: self._hybrid.stats.dynamic_hits)
+    rows_served = property(lambda self: self._hybrid.stats.rows_served)
+
+
 class TwoLevelCache:
+    """DEPRECATED shim: a ``memory -> disk`` ``HybridCache`` behind the
+    historic two-level surface (``fill_static`` + ``read_rows``)."""
+
     def __init__(
         self,
-        store: ChunkedEmbeddingStore,
+        store: DFSTier,
         policy: CachePolicy = CachePolicy.FIFO,
         dynamic_frac: float = 0.10,
     ):
         self.store = store
         self.policy = CachePolicy(policy)
         self.dynamic_frac = dynamic_frac
-        self.static: dict[int, np.ndarray] = {}  # chunk id -> block ("disk")
-        self.dynamic: OrderedDict[int, np.ndarray] = OrderedDict()
-        self.dynamic_capacity = 0
-        self.stats = CacheStats()
+        self.hybrid = HybridCache(
+            store,
+            build_tiers(
+                ("memory", "disk"), store.chunk_rows, store.dim, dtype=store.dtype
+            ),
+            policy=self.policy.value,
+            dynamic_frac=dynamic_frac,
+        )
+        self.stats = _LiveCacheStats(self.hybrid)
 
-    # -- static fill -----------------------------------------------------------
+    # -- legacy surface -----------------------------------------------------
     def fill_static(self, rows_needed: np.ndarray) -> None:
-        """Fetch from DFS every chunk containing a needed row (fill phase)."""
-        self.static.clear()
-        self.dynamic.clear()
-        chunks = np.unique(np.asarray(rows_needed, np.int64) // self.store.chunk_rows)
-        for c in chunks:
-            self.static[int(c)] = self.store.read_chunk(int(c))
-            self.stats.fill_chunks += 1
-        self.dynamic_capacity = max(1, int(self.dynamic_frac * len(self.static)))
-
-    # -- read path ---------------------------------------------------------------
-    def _get_chunk(self, c: int) -> np.ndarray:
-        if c in self.dynamic:
-            self.stats.dynamic_hits += 1
-            if self.policy is CachePolicy.LRU:
-                self.dynamic.move_to_end(c)
-            return self.dynamic[c]
-        # dynamic miss -> static disk read (guaranteed present after fill)
-        block = self.static.get(c)
-        if block is None:  # fill-free use (tests): fall back to DFS
-            block = self.store.read_chunk(c)
-            self.stats.fill_chunks += 1
-            self.static[c] = block
-        self.stats.static_reads += 1
-        self.dynamic[c] = block
-        if len(self.dynamic) > self.dynamic_capacity:
-            self.dynamic.popitem(last=False)  # FIFO and LRU both evict head
-        return block
+        """Fetch from DFS every chunk containing a needed row (now an
+        explicit ``plan_fill`` + ``fill`` on the hybrid cache)."""
+        self.hybrid.fill(self.hybrid.plan_fill(rows_needed))
 
     def read_rows(self, rows: np.ndarray) -> np.ndarray:
-        """Gather rows, grouped by chunk via one argsort (no O(rows) boolean
-        mask scan per chunk); one ``_get_chunk`` per distinct chunk, so the
-        cache accounting is identical to the scalar path."""
-        rows = np.asarray(rows, dtype=np.int64)
-        out = np.empty((rows.shape[0], self.store.dim), dtype=self.store.dtype)
-        for c, pos, crows in chunk_runs(rows, self.store.chunk_rows):
-            block = self._get_chunk(c)
-            out[pos] = block[crows - c * self.store.chunk_rows]
-        self.stats.rows_served += rows.shape[0]
-        return out
+        return self.hybrid.read_rows(rows)
+
+    @property
+    def dynamic_capacity(self) -> int:
+        return self.hybrid._effective_capacity(0)

@@ -1,10 +1,11 @@
 """Layerwise (redundancy-free) graph inference engine (paper §III-D, Fig. 7).
 
 A K-layer GNN is split into K one-layer slices.  Slice k reads layer-(k-1)
-embeddings of every vertex and its one-hop sampled neighbors from the
-two-level cache, computes layer-k embeddings for ALL vertices, and writes
-them to the chunked store — so no vertex-layer embedding is ever computed
-twice.  Work is allocated one-partition-per-worker; vertex IDs for embedding
+embeddings of every vertex and its one-hop sampled neighbors through a
+tiered ``HybridCache`` (``repro.core.storage``; tier stack and eviction
+policy come from the storage config), computes layer-k embeddings for ALL
+vertices, and writes them to the chunked store — so no vertex-layer
+embedding is ever computed twice.  Work is allocated one-partition-per-worker; vertex IDs for embedding
 I/O come from the graph reorder algorithm (PDS by default).
 
 Execution modes
@@ -35,8 +36,15 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
-from repro.core.inference.cache import CachePolicy, CacheStats, TwoLevelCache
-from repro.core.inference.store import ChunkedEmbeddingStore, IOCost
+from repro.core.inference.cache import CacheStats
+from repro.core.storage import (
+    DFSTier,
+    HybridCache,
+    HybridStats,
+    IOCost,
+    TierStats,
+    build_tiers,
+)
 from repro.core.sampling.service import (
     DEFAULT_DIRECTION,
     MAX_PARTS,
@@ -119,13 +127,39 @@ def assign_inference_owners(
 @dataclass
 class LayerStats:
     cache: CacheStats = field(default_factory=CacheStats)
+    # aggregated per-tier accounting (fast→slow) across this layer's
+    # partition caches; empty until the first partition finishes
+    tiers: list = field(default_factory=list)
     vertices_computed: int = 0
     edges_aggregated: int = 0
+
+    def absorb(self, hs: HybridStats) -> None:
+        """Fold one partition cache's counters into this layer's totals."""
+        self.cache.fill_chunks += hs.fill_chunks
+        self.cache.static_reads += hs.static_reads
+        self.cache.dynamic_hits += hs.dynamic_hits
+        self.cache.rows_served += hs.rows_served
+        if not self.tiers:
+            self.tiers = [TierStats(kind=t.kind) for t in hs.tiers]
+        for agg, t in zip(self.tiers, hs.tiers):
+            agg.hits += t.hits
+            agg.admits += t.admits
+            agg.evictions += t.evictions
+
+    def modeled_io_ms(self, cost: IOCost) -> float:
+        """Tier-aware rollup (the legacy two-level formula misattributes
+        hits for stacks that are not exactly memory+disk)."""
+        if not self.tiers:
+            return self.cache.modeled_time_ms(cost)
+        ms = self.cache.fill_chunks * cost.dfs_ms
+        for t in self.tiers:
+            ms += t.hits * cost.per_chunk_ms(t.kind)
+        return ms
 
 
 @dataclass
 class InferenceResult:
-    final_store: ChunkedEmbeddingStore
+    final_store: DFSTier
     newid: np.ndarray  # vertex gid -> row id in stores
     owner: np.ndarray
     layer_stats: list[LayerStats] = field(default_factory=list)
@@ -145,7 +179,7 @@ class InferenceResult:
         return h / (h + r) if (h + r) else 0.0
 
     def modeled_io_ms(self, cost: IOCost) -> float:
-        return sum(s.cache.modeled_time_ms(cost) for s in self.layer_stats)
+        return sum(s.modeled_io_ms(cost) for s in self.layer_stats)
 
     def vertices_computed(self) -> int:
         return sum(s.vertices_computed for s in self.layer_stats)
@@ -163,8 +197,10 @@ class LayerwiseInferenceEngine:
         fanouts: list[int] | None = None,
         reorder_alg: str = "PDS",
         chunk_rows: int = 4096,
-        policy: CachePolicy | str = CachePolicy.FIFO,
+        policy="fifo",  # CACHE_POLICIES name, class, or legacy CachePolicy
         dynamic_frac: float = 0.10,
+        storage_tiers: tuple = ("memory", "disk"),
+        tier_capacities: tuple = (),
         batch_size: int = 4096,
         direction: str = DEFAULT_DIRECTION,
         out_dims: list[int] | None = None,
@@ -184,8 +220,10 @@ class LayerwiseInferenceEngine:
         self.fanouts = fanouts or [10] * len(layer_fns)
         self.reorder_alg = reorder_alg
         self.chunk_rows = chunk_rows
-        self.policy = CachePolicy(policy)
+        self.policy = policy
         self.dynamic_frac = dynamic_frac
+        self.storage_tiers = tuple(storage_tiers)
+        self.tier_capacities = tuple(tier_capacities)
         self.batch_size = batch_size
         self.direction = direction
         self.out_dims = out_dims or [feats.shape[1]] * len(layer_fns)
@@ -226,6 +264,20 @@ class LayerwiseInferenceEngine:
             self._jitted[k] = jax.jit(jf)
         return self._jitted[k]
 
+    # -- tiered storage -------------------------------------------------
+    def _build_cache(self, store: DFSTier) -> HybridCache:
+        """One per-(layer, partition) tier stack from the storage config."""
+        tiers = build_tiers(
+            self.storage_tiers,
+            store.chunk_rows,
+            store.dim,
+            capacities=self.tier_capacities,
+            dtype=store.dtype,
+        )
+        return HybridCache(
+            store, tiers, policy=self.policy, dynamic_frac=self.dynamic_frac
+        )
+
     # ------------------------------------------------------------------
     def run(self) -> InferenceResult:
         g = self.g
@@ -242,7 +294,7 @@ class LayerwiseInferenceEngine:
         newid[perm] = np.arange(g.num_vertices)
 
         # layer-0 store: input features in newid order
-        store_prev = ChunkedEmbeddingStore(
+        store_prev = DFSTier(
             f"{self.workdir}/layer0",
             g.num_vertices,
             self.feats.shape[1],
@@ -266,7 +318,7 @@ class LayerwiseInferenceEngine:
             stats = LayerStats()
             slice_fn = self._slice_fn(k, layer_fn)
             needs_etype = getattr(layer_fn, "needs_etype", False)
-            store_next = ChunkedEmbeddingStore(
+            store_next = DFSTier(
                 f"{self.workdir}/layer{k + 1}",
                 g.num_vertices,
                 self.out_dims[k],
@@ -301,12 +353,17 @@ class LayerwiseInferenceEngine:
                         verts, [self.fanouts[k]], direction=self.direction
                     )
                 hop = sub.hops[0]
-                # static cache fill: all local rows + sampled neighbor rows
-                cache = TwoLevelCache(store_prev, self.policy, self.dynamic_frac)
+                # static cache fill: all local rows + sampled neighbor rows.
+                # The partition's own rows are the fill-plan focus window —
+                # the PDS reorder packs them contiguously, so the locality
+                # policy evicts far boundary chunks first.
+                cache = self._build_cache(store_prev)
                 rows_needed = newid[
                     np.unique(np.concatenate([verts, hop.dst]))
                 ]
-                cache.fill_static(rows_needed)
+                cache.fill(
+                    cache.plan_fill(rows_needed, focus_rows=newid[verts])
+                )
                 # process in inference order batches
                 order = np.argsort(hop.src, kind="stable")
                 h_src_sorted = hop.src[order]
@@ -357,10 +414,8 @@ class LayerwiseInferenceEngine:
                     store_next.write_rows(newid[vb], h_new)
                     stats.vertices_computed += vb.shape[0]
                     stats.edges_aggregated += int(nbr_rows.shape[0])
-                stats.cache.fill_chunks += cache.stats.fill_chunks
-                stats.cache.static_reads += cache.stats.static_reads
-                stats.cache.dynamic_hits += cache.stats.dynamic_hits
-                stats.cache.rows_served += cache.stats.rows_served
+                stats.absorb(cache.stats)
+                cache.evict()  # release this partition's cache residency
             result.layer_stats.append(stats)
             store_prev = store_next
         result.final_store = store_prev

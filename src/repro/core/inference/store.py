@@ -1,149 +1,17 @@
-"""Chunked embedding store — the Zarr-on-DFS stand-in (paper §III-D).
+"""DEPRECATED module — the chunked store moved to ``repro.core.storage``.
 
-The full embedding matrix of one GNN layer is chunked into fixed-row files
-(paper: chunk 32768 rows, Blosclz-compressed, on HDFS).  Here chunks are .npy
-files (optionally zlib-compressed .npz) in a local directory, with explicit
-read counters and an I/O *cost model* so benchmarks can report modeled
-DFS/disk/memory retrieval times without a real HDFS cluster:
-
-    IOCost.dfs_ms    per-chunk read from the remote store (paper: HDFS)
-    IOCost.disk_ms   per-chunk read from the worker-local static cache (disk)
-    IOCost.mem_ms    per-chunk hit in the dynamic in-memory cache
+``ChunkedEmbeddingStore`` is now a thin alias of
+:class:`repro.core.storage.DFSTier` (same constructor, same files on disk,
+same counters) kept for one release of deprecation, mirroring the
+``backend.sample()`` playbook; ``IOCost`` and ``chunk_runs`` re-export from
+their new home.  New call sites should import from ``repro.core.storage``.
 """
 from __future__ import annotations
 
-import os
-from dataclasses import dataclass, field
+from repro.core.storage.store import DFSTier, IOCost, StoreStats, chunk_runs
 
-import numpy as np
-
-from repro.utils import ceil_div
-
-__all__ = ["ChunkedEmbeddingStore", "IOCost", "chunk_runs"]
+__all__ = ["ChunkedEmbeddingStore", "IOCost", "StoreStats", "chunk_runs"]
 
 
-def chunk_runs(rows: np.ndarray, chunk_rows: int):
-    """Group row ids by chunk with one argsort (no O(rows) boolean mask per
-    chunk).  Yields ``(chunk_id, positions, chunk_rows_sorted)`` per distinct
-    chunk, where ``positions`` indexes the original ``rows`` array and
-    ``chunk_rows_sorted`` are the corresponding row ids (ascending)."""
-    chunk_ids = rows // chunk_rows
-    order = np.argsort(chunk_ids, kind="stable")
-    sorted_rows = rows[order]
-    sorted_chunks = chunk_ids[order]
-    uniq, run_starts = np.unique(sorted_chunks, return_index=True)
-    run_ends = np.append(run_starts[1:], sorted_chunks.shape[0])
-    for c, a, b in zip(uniq, run_starts, run_ends):
-        yield int(c), order[a:b], sorted_rows[a:b]
-
-
-@dataclass
-class IOCost:
-    # Defaults modeled on the paper's setting: HDFS round-trip ≫ local SSD ≫
-    # memory.  Only *ratios* matter for speedup numbers.
-    dfs_ms: float = 20.0
-    disk_ms: float = 2.0
-    mem_ms: float = 0.05
-
-
-@dataclass
-class StoreStats:
-    chunk_writes: int = 0
-    chunk_reads: int = 0  # reads that actually hit this store
-    rows_read: int = 0
-
-
-class ChunkedEmbeddingStore:
-    """One layer's [N, D] embedding matrix as fixed-size row chunks.
-
-    Rows are indexed by the *reordered* consecutive local id (paper §III-D:
-    the reorder algorithm assigns the IDs; chunk = id // chunk_rows)."""
-
-    def __init__(
-        self,
-        path: str,
-        num_rows: int,
-        dim: int,
-        chunk_rows: int = 32768,
-        compress: bool = False,
-        dtype=np.float32,
-    ):
-        self.path = path
-        self.num_rows = num_rows
-        self.dim = dim
-        self.chunk_rows = chunk_rows
-        self.compress = compress
-        self.dtype = dtype
-        self.num_chunks = ceil_div(num_rows, chunk_rows)
-        self.stats = StoreStats()
-        os.makedirs(path, exist_ok=True)
-
-    # -- chunk addressing ----------------------------------------------------
-    def chunk_of(self, rows: np.ndarray) -> np.ndarray:
-        return np.asarray(rows) // self.chunk_rows
-
-    def _chunk_file(self, c: int) -> str:
-        return os.path.join(
-            self.path, f"chunk_{c:06d}.{'npz' if self.compress else 'npy'}"
-        )
-
-    # -- IO -------------------------------------------------------------------
-    def write_rows(self, rows: np.ndarray, values: np.ndarray) -> None:
-        """Write rows (values[i] -> row rows[i]); groups by chunk with one
-        argsort (no boolean mask scan per chunk).  A write that covers every
-        row of a chunk skips the read-modify-write and stores the values
-        slice directly (workers write disjoint row ranges)."""
-        rows = np.asarray(rows, dtype=np.int64)
-        values = np.asarray(values)
-        order = np.argsort(rows, kind="stable")
-        rows, values = rows[order], values[order]
-        for c, pos, crows in chunk_runs(rows, self.chunk_rows):
-            base = c * self.chunk_rows
-            nrows = min(self.chunk_rows, self.num_rows - base)
-            off = crows - base
-            if off.shape[0] == nrows and np.array_equal(
-                off, np.arange(nrows, dtype=np.int64)
-            ):
-                block = np.ascontiguousarray(values[pos], dtype=self.dtype)
-            else:
-                block = self._read_chunk_raw(c, allow_missing=True)
-                block[off] = values[pos]
-            self._write_chunk_raw(c, block)
-
-    def _write_chunk_raw(self, c: int, block: np.ndarray) -> None:
-        fn = self._chunk_file(c)
-        if self.compress:
-            np.savez_compressed(fn[:-4], block=block)
-        else:
-            np.save(fn, block)
-        self.stats.chunk_writes += 1
-
-    def _read_chunk_raw(self, c: int, allow_missing: bool = False) -> np.ndarray:
-        fn = self._chunk_file(c)
-        nrows = min(self.chunk_rows, self.num_rows - c * self.chunk_rows)
-        if not os.path.exists(fn):
-            if allow_missing:
-                return np.zeros((nrows, self.dim), dtype=self.dtype)
-            raise FileNotFoundError(fn)
-        if self.compress:
-            with np.load(fn) as z:
-                return z["block"]
-        return np.load(fn)
-
-    def read_chunk(self, c: int) -> np.ndarray:
-        """Counted read — a 'remote DFS fetch' in the cost model."""
-        block = self._read_chunk_raw(c)
-        self.stats.chunk_reads += 1
-        self.stats.rows_read += block.shape[0]
-        return block
-
-    def read_rows_direct(self, rows: np.ndarray) -> np.ndarray:
-        """Uncached row gather (the Fig.-14a baseline: read straight from
-        HDFS, one chunk fetch per distinct chunk touched); grouped by chunk
-        via one argsort instead of a boolean mask scan per chunk."""
-        rows = np.asarray(rows, dtype=np.int64)
-        out = np.empty((rows.shape[0], self.dim), dtype=self.dtype)
-        for c, pos, crows in chunk_runs(rows, self.chunk_rows):
-            block = self.read_chunk(c)
-            out[pos] = block[crows - c * self.chunk_rows]
-        return out
+class ChunkedEmbeddingStore(DFSTier):
+    """DEPRECATED alias of :class:`repro.core.storage.DFSTier`."""

@@ -1,0 +1,63 @@
+"""repro.core.storage — the tiered storage subsystem (paper §III-D).
+
+One pluggable ``HybridCache`` API for layer embeddings (inference) and
+input features (training):
+
+    DFSTier          authoritative chunked store (the Zarr-on-DFS stand-in)
+    MemoryTier/DiskTier  bounded cache tiers above it (STORAGE_TIERS)
+    CACHE_POLICIES   fifo | lru | locality eviction policies
+    HybridCache      the ordered tier stack with plan_fill()/evict()
+    FeatureSource    the training-side feature-fetch surface
+
+The historic ``ChunkedEmbeddingStore`` / ``TwoLevelCache`` names remain as
+deprecation shims in ``repro.core.inference`` over this package.
+"""
+from repro.core.storage.store import DFSTier, IOCost, StoreStats, chunk_runs
+from repro.core.storage.tiers import (
+    STORAGE_TIERS,
+    DiskTier,
+    MemoryTier,
+    StorageTier,
+    TierStats,
+)
+from repro.core.storage.policies import (
+    CACHE_POLICIES,
+    EvictionPolicy,
+    FifoPolicy,
+    LocalityPolicy,
+    LruPolicy,
+    resolve_policy,
+)
+from repro.core.storage.hybrid import FillPlan, HybridCache, HybridStats, build_tiers
+from repro.core.storage.features import (
+    ArrayFeatureSource,
+    FeatureSource,
+    StoreFeatureSource,
+    as_feature_source,
+)
+
+__all__ = [
+    "ArrayFeatureSource",
+    "CACHE_POLICIES",
+    "DFSTier",
+    "DiskTier",
+    "EvictionPolicy",
+    "FeatureSource",
+    "FifoPolicy",
+    "FillPlan",
+    "HybridCache",
+    "HybridStats",
+    "IOCost",
+    "LocalityPolicy",
+    "LruPolicy",
+    "MemoryTier",
+    "STORAGE_TIERS",
+    "StorageTier",
+    "StoreFeatureSource",
+    "StoreStats",
+    "TierStats",
+    "as_feature_source",
+    "build_tiers",
+    "chunk_runs",
+    "resolve_policy",
+]

@@ -16,6 +16,7 @@ import jax
 import numpy as np
 
 from repro.core.sampling.service import SampledSubgraph
+from repro.core.storage import as_feature_source
 from repro.utils import round_up
 
 __all__ = ["GNNBatch", "subgraph_to_batch"]
@@ -44,7 +45,7 @@ def _bucket(n: int, quantum: int = 256) -> int:
 
 def subgraph_to_batch(
     sub: SampledSubgraph,
-    feats: np.ndarray,
+    feats,  # [N, F] ndarray or a repro.core.storage.FeatureSource
     labels: np.ndarray | None,
     num_layers: int,
     edge_types_lookup=None,  # optional fn (src_gid, dst_gid) -> etype
@@ -52,10 +53,11 @@ def subgraph_to_batch(
     vertex_quantum: int = 256,
     edge_quantum: int = 1024,
 ) -> GNNBatch:
+    src = as_feature_source(feats)
     verts = sub.all_vertices()  # unique sorted gids
     vpad = _bucket(verts.shape[0], vertex_quantum)
-    table = np.zeros((vpad, feats.shape[1]), dtype=np.float32)
-    table[: verts.shape[0]] = feats[verts]
+    table = np.zeros((vpad, src.dim), dtype=np.float32)
+    table[: verts.shape[0]] = src.gather(verts)
     valid = np.zeros(vpad, dtype=bool)
     valid[: verts.shape[0]] = True
 

@@ -58,6 +58,7 @@ class GNNTrainer:
         worker_cores: tuple | None = None,
         partition_of: np.ndarray | None = None,
         balance_partitions: bool = False,
+        feature_source=None,  # FeatureSource; None = g.vertex_feats
     ):
         self.model = model
         self.client = client
@@ -78,6 +79,7 @@ class GNNTrainer:
             seed=seed,
             partition_of=partition_of,
             balance_partitions=balance_partitions,
+            feature_source=feature_source,
         )
         self.fanouts = self.pipeline.fanouts
         self.direction = self.pipeline.direction

@@ -7,10 +7,12 @@ import threading
 import time
 from contextlib import contextmanager
 from dataclasses import dataclass, field
+from typing import Generic, Iterator, TypeVar
 
 import numpy as np
 
 __all__ = [
+    "Registry",
     "Timer",
     "timed",
     "human_bytes",
@@ -22,6 +24,57 @@ __all__ = [
     "json_dump",
     "prefetch_iterator",
 ]
+
+_T = TypeVar("_T")
+
+
+class Registry(Generic[_T]):
+    """Case-insensitive name -> component map with decorator registration.
+
+    Lives here (dependency-free) so both ``repro.api`` and ``repro.core``
+    subsystems can define registries without an import cycle; the canonical
+    public re-export stays ``repro.api.registry.Registry``."""
+
+    def __init__(self, kind: str):
+        self.kind = kind
+        self._entries: dict[str, _T] = {}
+
+    @staticmethod
+    def _key(name: str) -> str:
+        return name.strip().lower()
+
+    def register(self, name: str, obj: _T | None = None):
+        """``REG.register("name", obj)`` or ``@REG.register("name")``."""
+        key = self._key(name)
+
+        def _add(o: _T) -> _T:
+            if key in self._entries:
+                raise ValueError(f"{self.kind} {name!r} already registered")
+            self._entries[key] = o
+            return o
+
+        return _add if obj is None else _add(obj)
+
+    def get(self, name: str) -> _T:
+        key = self._key(name)
+        if key not in self._entries:
+            known = ", ".join(sorted(self._entries)) or "<none>"
+            raise ValueError(
+                f"unknown {self.kind} {name!r}; registered: {known}"
+            )
+        return self._entries[key]
+
+    def names(self) -> list[str]:
+        return sorted(self._entries)
+
+    def __contains__(self, name: str) -> bool:
+        return self._key(name) in self._entries
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(sorted(self._entries))
+
+    def __len__(self) -> int:
+        return len(self._entries)
 
 
 def prefetch_iterator(it, depth: int):

@@ -44,6 +44,11 @@ class strategies:  # noqa: N801 - mirrors the hypothesis module name
     def booleans() -> _Strategy:
         return _Strategy(lambda rng: bool(rng.integers(0, 2)))
 
+    @staticmethod
+    def sampled_from(options) -> _Strategy:
+        opts = list(options)
+        return _Strategy(lambda rng: opts[int(rng.integers(0, len(opts)))])
+
 
 def settings(max_examples: int = _DEFAULT_MAX_EXAMPLES, deadline=None, **_ignored):
     def deco(fn):
