@@ -1,15 +1,39 @@
-"""Paper Table II: RF / VB / EB / runtime of ParMETIS-stand-in (LDG edge-cut),
-DistributedNE and AdaDNE across datasets and partition counts."""
+"""Partitioning subsystem benchmarks -> ``BENCH_partition.json``.
+
+Four measurements (mirroring the BENCH_inference/BENCH_sampling pattern):
+
+- **table2** (full mode only) — paper Table II: RF / VB / EB / runtime of the
+  ParMETIS-stand-in (LDG edge-cut), DistributedNE and AdaDNE across datasets
+  and partition counts.
+- **quality** — wall-clock, replication factor and vertex/edge balance
+  (VS/ES) per registered partitioner on one power-law graph, including the
+  sequential ``*_loop`` reference entries.
+- **speedup** — lockstep-vectorized AdaDNE vs the sequential loop
+  implementation on the benchmark graph; the refactor's contract is >=5x
+  wall-clock at equal-or-better RF/VB/EB (asserted in full mode, reported
+  always).
+- **cache** — two ``GLISPSystem.build`` calls with ``partition_cache_dir``
+  set: the second must report a cache hit with near-zero partition seconds.
+
+``--smoke`` shrinks the workload for CI and skips the Table II sweep.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import shutil
+import tempfile
 import time
 
 from benchmarks.common import dataset, emit
-from repro.core.partition import adadne, distributed_ne, ldg_edge_cut
+from repro.core.partition import PARTITIONERS, ldg_edge_cut
+from repro.graph import power_law_graph
 from repro.graph.metrics import (
     metrics_from_edge_assignment,
     metrics_from_vertex_assignment,
 )
+
+RESULTS: dict = {}
 
 CASES = [
     ("ogbn-products", 2),
@@ -19,14 +43,21 @@ CASES = [
     ("ogbn-paper", 8),
 ]
 
+QUALITY_ALGS = ("adadne", "adadne_loop", "dne", "dne_loop", "ldg", "hash2d", "random")
 
-def run():
+
+def _emit(name: str, value: float) -> None:
+    RESULTS[name] = float(value)
+    emit(name, value)
+
+
+def bench_table2():
     for ds, parts in CASES:
         g = dataset(ds)
         for alg_name, fn, edge_cut in (
             ("LDG(edge-cut)", ldg_edge_cut, True),
-            ("DistributedNE", distributed_ne, False),
-            ("AdaDNE", adadne, False),
+            ("DistributedNE", lambda g, p, seed: PARTITIONERS.get("dne").partition(g, p, seed=seed).edge_parts, False),
+            ("AdaDNE", lambda g, p, seed: PARTITIONERS.get("adadne").partition(g, p, seed=seed).edge_parts, False),
         ):
             t0 = time.perf_counter()
             assign = fn(g, parts, seed=0)
@@ -37,11 +68,104 @@ def run():
                 else metrics_from_edge_assignment(g, assign, parts)
             )
             tag = f"table2/{ds}/p{parts}/{alg_name}"
-            emit(tag + "/RF", m["RF"])
-            emit(tag + "/VB", m["VB"])
-            emit(tag + "/EB", m["EB"])
-            emit(tag + "/time_s", dt)
+            _emit(tag + "/RF", m["RF"])
+            _emit(tag + "/VB", m["VB"])
+            _emit(tag + "/EB", m["EB"])
+            _emit(tag + "/time_s", dt)
+
+
+def bench_quality(g, parts: int):
+    """Wall-clock + scorecard per registered partitioner (one plan each)."""
+    for name in QUALITY_ALGS:
+        pt = PARTITIONERS.get(name)
+        t0 = time.perf_counter()
+        plan = pt.partition(g, parts, seed=0)
+        dt = time.perf_counter() - t0
+        tag = f"quality/p{parts}/{name}"
+        _emit(tag + "/time_s", dt)
+        _emit(tag + "/RF", plan.replication_factor)
+        _emit(tag + "/VB", plan.vertex_balance)
+        _emit(tag + "/EB", plan.edge_balance)
+
+
+def bench_speedup(g, parts: int, require: bool):
+    """Lockstep-vectorized AdaDNE vs the sequential loop reference."""
+    wall = {}
+    plans = {}
+    for name in ("adadne", "adadne_loop"):
+        pt = PARTITIONERS.get(name)
+        t0 = time.perf_counter()
+        plans[name] = pt.partition(g, parts, seed=0)
+        wall[name] = time.perf_counter() - t0
+        _emit(f"speedup/p{parts}/{name}/time_s", wall[name])
+    ratio = wall["adadne_loop"] / max(wall["adadne"], 1e-9)
+    _emit(f"speedup/p{parts}/lockstep_vs_loop", ratio)
+    fast, ref = plans["adadne"], plans["adadne_loop"]
+    _emit(f"speedup/p{parts}/RF_lockstep", fast.replication_factor)
+    _emit(f"speedup/p{parts}/RF_loop", ref.replication_factor)
+    # equal-or-better quality within a small statistical slack
+    quality_ok = (
+        fast.replication_factor <= ref.replication_factor * 1.05
+        and fast.vertex_balance <= ref.vertex_balance * 1.10
+        and fast.edge_balance <= ref.edge_balance * 1.10
+    )
+    RESULTS[f"speedup/p{parts}/quality_ok"] = bool(quality_ok)
+    emit(f"speedup/p{parts}/quality_ok", 1.0 if quality_ok else 0.0)
+    RESULTS[f"speedup/p{parts}/target_met"] = bool(ratio >= 5.0)
+    emit(f"speedup/p{parts}/target_met", 1.0 if ratio >= 5.0 else 0.0)
+    assert quality_ok, "lockstep AdaDNE quality regressed vs the loop reference"
+    if require:
+        assert ratio >= 5.0, f"lockstep speedup {ratio:.2f}x below the 5x target"
+
+
+def bench_cache(g, parts: int):
+    """Second build with a partition cache must skip repartitioning."""
+    from repro.api import GLISPConfig, GLISPSystem
+
+    cache_dir = tempfile.mkdtemp(prefix="glisp-bench-pcache-")
+    try:
+        cfg = GLISPConfig(
+            num_parts=parts, fanouts=(4,), partition_cache_dir=cache_dir
+        )
+        cold = GLISPSystem.build(g, cfg)
+        warm = GLISPSystem.build(g, cfg)
+        _emit("cache/cold_partition_s", cold.partition_seconds)
+        _emit("cache/warm_partition_s", warm.partition_seconds)
+        _emit(
+            "cache/speedup",
+            cold.partition_seconds / max(warm.partition_seconds, 1e-9),
+        )
+        RESULTS["cache/hit"] = bool(warm.partition_cache_hit)
+        emit("cache/hit", 1.0 if warm.partition_cache_hit else 0.0)
+        assert warm.partition_cache_hit, "second build missed the plan cache"
+        assert (warm.plan.edge_parts == cold.plan.edge_parts).all()
+    finally:
+        shutil.rmtree(cache_dir, ignore_errors=True)
+
+
+def run(smoke: bool = False, out_json: str | None = "BENCH_partition.json"):
+    if not smoke:
+        bench_table2()
+    # the per-partitioner scorecard runs on a smaller graph than the
+    # speedup case: the loop references in QUALITY_ALGS are the slow part
+    gq = power_law_graph(60_000 if smoke else 120_000, avg_degree=8, seed=3)
+    bench_quality(gq, 8)
+    # lockstep-vs-loop at P=32, where the sequential implementation's
+    # per-partition Python overhead is the scalability wall the lockstep
+    # rewrite removes; sized so the >=5x contract holds with margin
+    gs = power_law_graph(120_000 if smoke else 240_000, avg_degree=8, seed=3)
+    bench_speedup(gs, 32, require=not smoke)
+    bench_cache(gq, 8)
+
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(RESULTS, fh, indent=2, sort_keys=True)
+        print(f"wrote {out_json}")
 
 
 if __name__ == "__main__":
-    run()
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI workload")
+    ap.add_argument("--out", default="BENCH_partition.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_json=args.out)

@@ -17,6 +17,8 @@ from repro.api.backends import (
     STORAGE_TIERS,
     EdgeCutBackend,
     GatherApplyBackend,
+    Partitioner,
+    PartitionPipeline,
     PartitionPlan,
     SamplerBackend,
 )
@@ -48,6 +50,8 @@ __all__ = [
     "BatchPipeline",
     "Registry",
     "PartitionPlan",
+    "Partitioner",
+    "PartitionPipeline",
     "SamplerBackend",
     "GatherApplyBackend",
     "EdgeCutBackend",

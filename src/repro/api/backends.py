@@ -17,7 +17,6 @@ for one release of deprecation; new call sites should build a
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import TYPE_CHECKING, Protocol, runtime_checkable
 
 import numpy as np
@@ -25,12 +24,10 @@ import numpy as np
 from repro.api.registry import Registry
 from repro.core.storage import CACHE_POLICIES, STORAGE_TIERS
 from repro.core.partition import (
-    adadne,
-    distributed_ne,
-    edge_cut_to_edge_assignment,
-    hash2d_partition,
-    ldg_edge_cut,
-    random_edge_partition,
+    PARTITIONERS,
+    Partitioner,
+    PartitionPipeline,
+    PartitionPlan,
 )
 from repro.core.sampling.service import (
     DEFAULT_DIRECTION,
@@ -52,6 +49,8 @@ if TYPE_CHECKING:
 
 __all__ = [
     "PartitionPlan",
+    "Partitioner",
+    "PartitionPipeline",
     "SamplerBackend",
     "GatherApplyBackend",
     "EdgeCutBackend",
@@ -64,60 +63,13 @@ __all__ = [
 
 
 # ---------------------------------------------------------------------------
-# Partitioners: name -> fn(g, num_parts, *, seed, direction) -> PartitionPlan
+# Partitioners: ``PARTITIONERS``, ``PartitionPlan`` and the ``Partitioner``
+# protocol are owned by the partitioning subsystem (``repro.core.partition``,
+# mirroring the storage-owned ``CACHE_POLICIES``) and re-exported here as the
+# canonical public import path.  Every entry is a ``Partitioner`` instance:
+# ``PARTITIONERS.get(name).partition(g, num_parts, seed=..., direction=...)``
+# (instances are also callable with the same signature).
 # ---------------------------------------------------------------------------
-
-
-@dataclass(frozen=True)
-class PartitionPlan:
-    """Output of any registered partitioner.
-
-    ``edge_parts[e]`` is the partition id of edge e (the vertex-cut edge
-    assignment every backend builds from).  ``vertex_owner`` is set only by
-    edge-cut (vertex) partitioners and is required by the ``edge_cut``
-    sampler backend for owner routing."""
-
-    edge_parts: np.ndarray
-    vertex_owner: np.ndarray | None = None
-
-
-PARTITIONERS: Registry = Registry("partitioner")
-
-
-def _register_edge_partitioner(name: str, fn) -> None:
-    def _wrapped(
-        g: HeteroGraph,
-        num_parts: int,
-        *,
-        seed: int = 0,
-        direction: str = DEFAULT_DIRECTION,
-    ) -> PartitionPlan:
-        return PartitionPlan(edge_parts=fn(g, num_parts, seed=seed))
-
-    _wrapped.__name__ = f"partitioner_{name}"
-    PARTITIONERS.register(name, _wrapped)
-
-
-_register_edge_partitioner("adadne", adadne)
-_register_edge_partitioner("dne", distributed_ne)
-_register_edge_partitioner("hash2d", hash2d_partition)
-_register_edge_partitioner("random", random_edge_partition)
-
-
-@PARTITIONERS.register("ldg")
-def _ldg_plan(
-    g: HeteroGraph,
-    num_parts: int,
-    *,
-    seed: int = 0,
-    direction: str = DEFAULT_DIRECTION,
-) -> PartitionPlan:
-    """LDG streaming edge-cut: vertices get owners; edges follow the vertex
-    whose ``direction`` one-hop must stay local (so GLISP-vs-baseline
-    comparisons sample the same direction on both systems)."""
-    vp = ldg_edge_cut(g, num_parts, seed=seed)
-    ep = edge_cut_to_edge_assignment(g, vp, local_direction=direction)
-    return PartitionPlan(edge_parts=ep, vertex_owner=vp.astype(np.int64))
 
 
 # ---------------------------------------------------------------------------

@@ -28,7 +28,13 @@ __all__ = ["GLISPConfig"]
 class GLISPConfig:
     # -- partitioning --------------------------------------------------------
     num_parts: int = 4
-    partitioner: str = "adadne"  # adadne | dne | ldg | hash2d | random
+    # adadne | dne (lockstep-vectorized) | adadne_loop | dne_loop (sequential
+    # reference) | ldg | hash2d | random
+    partitioner: str = "adadne"
+    # content-addressed on-disk cache for the partition->reorder pipeline
+    # artifacts (plan + permutation); None disables.  A second build over the
+    # same graph+config loads the plan instead of repartitioning.
+    partition_cache_dir: str | None = None
 
     # -- sampling service ----------------------------------------------------
     sampler: str = "gather_apply"  # gather_apply | edge_cut
@@ -115,6 +121,14 @@ class GLISPConfig:
                 f"num_parts must be in [1, {MAX_PARTS}], got {self.num_parts}"
             )
         PARTITIONERS.get(self.partitioner)
+        if self.partition_cache_dir is not None and (
+            not isinstance(self.partition_cache_dir, str)
+            or not self.partition_cache_dir
+        ):
+            raise ValueError(
+                "partition_cache_dir must be None or a non-empty path, got "
+                f"{self.partition_cache_dir!r}"
+            )
         SAMPLERS.get(self.sampler)
         if self.reorder not in REORDERS:
             raise ValueError(

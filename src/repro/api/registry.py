@@ -3,14 +3,23 @@ algorithms, cache policies, storage tiers.
 
 Every pluggable piece of the GLISP system is resolved by name through a
 ``Registry`` so configs stay plain data (``GLISPConfig`` fields are strings)
-and downstream code extends the system without touching the facade:
+and downstream code extends the system without touching the facade.  Each
+registry documents its own entry contract — e.g. ``PARTITIONERS`` holds
+``Partitioner`` INSTANCES (objects with a ``name`` and a
+``partition(g, num_parts, *, seed, direction) -> PartitionPlan`` method):
 
-    from repro.api import PARTITIONERS
+    from repro.api import PARTITIONERS, PartitionPlan
 
-    @PARTITIONERS.register("my-partitioner")
-    def my_partitioner(g, num_parts, *, seed=0, direction="out"):
-        ...
-        return PartitionPlan(edge_parts=ep)
+    class MyPartitioner:
+        name = "my-partitioner"
+
+        def partition(self, g, num_parts, *, seed=0, direction="out"):
+            ...
+            return PartitionPlan.from_assignment(
+                g, ep, num_parts, partitioner=self.name, seed=seed
+            )
+
+    PARTITIONERS.register("my-partitioner", MyPartitioner())
 
 Unknown names raise ``ValueError`` listing what IS registered — the
 config-typo failure mode is a one-line fix instead of a silent KeyError deep

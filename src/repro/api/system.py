@@ -23,16 +23,16 @@ import numpy as np
 
 from repro.api.backends import (
     CACHE_POLICIES,
-    PARTITIONERS,
     REORDERS,
     SAMPLERS,
     GatherApplyBackend,
+    PartitionPipeline,
     PartitionPlan,
     SamplerBackend,
 )
 from repro.api.config import GLISPConfig
 from repro.api.pipeline import BatchPipeline
-from repro.graph.graph import GraphPartition, HeteroGraph, build_partitions
+from repro.graph.graph import GraphPartition, HeteroGraph
 from repro.graph.metrics import partition_metrics
 
 __all__ = ["GLISPSystem"]
@@ -46,35 +46,62 @@ class GLISPSystem:
     partitions: list[GraphPartition]
     backend: SamplerBackend
     partition_seconds: float = 0.0
+    # True when the partition/reorder artifacts were loaded from the
+    # content-addressed pipeline cache instead of computed
+    partition_cache_hit: bool = False
+    # reorder permutation from the pipeline (perm[new_id] = old vertex id),
+    # grouped by the plan's per-vertex partition per config.reorder
+    reorder_perm: np.ndarray | None = field(default=None, repr=False)
+    pipeline_seconds: dict = field(default_factory=dict, repr=False)
     _metrics: dict | None = field(default=None, repr=False)
 
     # ------------------------------------------------------------------
     @classmethod
-    def build(cls, graph: HeteroGraph, config: GLISPConfig | None = None, **overrides):
-        """Compose the full system from a config (plus keyword overrides)."""
-        import time
+    def build(
+        cls,
+        graph: HeteroGraph,
+        config: GLISPConfig | None = None,
+        *,
+        cache_dir: str | None = None,
+        **overrides,
+    ):
+        """Compose the full system from a config (plus keyword overrides).
 
+        Partitioning runs through the cached ``PartitionPipeline``:
+        ``cache_dir`` (or ``config.partition_cache_dir``) names an on-disk
+        artifact cache keyed by graph content + partition config, so a
+        second build over the same inputs skips repartitioning entirely
+        (``partition_cache_hit`` reports which path was taken)."""
         config = (config or GLISPConfig()).replace(**overrides).validate()
-        t0 = time.perf_counter()
-        plan = PARTITIONERS.get(config.partitioner)(
-            graph, config.num_parts, seed=config.seed, direction=config.direction
+        pipeline = PartitionPipeline(
+            config.partitioner,
+            config.num_parts,
+            reorder=config.reorder,
+            seed=config.seed,
+            direction=config.direction,
+            cache_dir=(
+                cache_dir if cache_dir is not None else config.partition_cache_dir
+            ),
         )
-        dt = time.perf_counter() - t0  # the algorithm, not materialization
+        res = pipeline.run(graph)
+        plan = res.plan
         if config.balance_partitions and plan.vertex_owner is None:
             raise ValueError(
                 "balance_partitions needs per-vertex owners, which only "
                 "vertex partitioners produce (e.g. partitioner='ldg'); "
                 f"{config.partitioner!r} yields a vertex-cut edge assignment"
             )
-        parts = build_partitions(graph, plan.edge_parts, config.num_parts)
-        backend = SAMPLERS.get(config.sampler)(graph, plan, parts, config)
+        backend = SAMPLERS.get(config.sampler)(graph, plan, res.partitions, config)
         return cls(
             graph=graph,
             config=config,
             plan=plan,
-            partitions=parts,
+            partitions=res.partitions,
             backend=backend,
-            partition_seconds=dt,
+            partition_seconds=res.partition_seconds,
+            partition_cache_hit=res.cache_hit,
+            reorder_perm=res.perm,
+            pipeline_seconds=res.seconds,
         )
 
     # -- sampling ------------------------------------------------------

@@ -19,24 +19,60 @@ so over-full partitions expand slower and under-full ones faster, giving soft
 constraints on BOTH vertex and edge balance (the hard threshold is removed,
 equivalent to τ = |P|).
 
-The P logical workers are simulated in lockstep; partition membership is a
-uint64 bitmask per vertex (P ≤ 64), making the two-hop common-partition test
-a vectorized AND.
+Two execution modes share the config and the greedy policy:
+
+``mode="lockstep"`` (default) simulates the P logical workers the way the
+paper's cluster actually runs them — one *batched* expansion step per
+iteration.  All partitions select their smallest-degree boundary candidates
+against the same snapshot, their one-hop edge claims are resolved in one
+vectorized pass (per contested edge the lowest-|E_p| partition wins, ties
+broken by lower partition id via lexsort — the same greedy preference the
+sequential code expresses), and membership/boundary bookkeeping is one
+grouped update over (partition, vertex) pairs.  Candidate pools are kept
+sorted by a static (degree, id) rank, so smallest-degree-first selection is
+a prefix cut and appending new boundary vertices is a vectorized sorted
+merge; no per-partition Python inner loop ever touches edges or vertices,
+and nothing re-sorts or re-scans a full candidate set per iteration.
+
+``mode="loop"`` preserves the original sequential reference implementation
+(partition p sees partition p-1's allocations within the same iteration)
+for before/after benchmarking and as the statistical-equivalence gate for
+the lockstep rewrite.
+
+Partition membership is a uint64 bitmask per vertex (P ≤ 64), making the
+two-hop common-partition test a vectorized AND in both modes.
 """
 from __future__ import annotations
 
+import dataclasses
 from dataclasses import dataclass
 
 import numpy as np
 
+from repro.core.partition.base import (
+    DEFAULT_DIRECTION,
+    PartitionerBase,
+    PartitionPlan,
+)
 from repro.graph.graph import HeteroGraph
+from repro.utils import concat_ranges, csr_slots, incidence_csr
 
-__all__ = ["NeighborExpansionPartitioner", "distributed_ne", "adadne"]
+__all__ = [
+    "NEConfig",
+    "NeighborExpansionPartitioner",
+    "distributed_ne",
+    "adadne",
+]
+
+NE_MODES = ("lockstep", "loop")
 
 
-@dataclass
+@dataclass(frozen=True)
 class NEConfig:
-    num_parts: int
+    # ``num_parts``/``seed`` are legacy defaults for the class-level call
+    # style; the protocol call ``partition(g, num_parts, seed=...)``
+    # overrides both.
+    num_parts: int = 0
     adaptive: bool = False  # False -> DistributedNE, True -> AdaDNE
     lam0: float = 0.1  # initial expansion factor (DNE default)
     tau: float = 1.1  # DNE imbalance factor (ignored when adaptive)
@@ -52,52 +88,406 @@ class NEConfig:
     # budget restores the iteration granularity the algorithm assumes; it does
     # not change the expansion policy.
     budget_frac: float = 0.01
+    mode: str = "lockstep"  # lockstep (vectorized) | loop (sequential legacy)
+    trace: bool = True  # record the per-iteration convergence trace
 
 
-class NeighborExpansionPartitioner:
-    def __init__(self, cfg: NEConfig):
+# ---------------------------------------------------------------------------
+# shared vectorized helpers (CSR machinery lives in ``repro.utils``)
+# ---------------------------------------------------------------------------
+
+_ranges = concat_ranges
+_gather_slots = csr_slots
+
+
+def _incidence(g: HeteroGraph) -> tuple[np.ndarray, np.ndarray]:
+    """Undirected incidence CSR: vertex -> incident edge ids (out then in)."""
+    eids = np.arange(g.num_edges, dtype=np.int64)
+    return incidence_csr(g.num_vertices, [(g.src, eids), (g.dst, eids)])
+
+
+def _iteration_budgets(
+    lam: np.ndarray,
+    bsize: np.ndarray,
+    terminated: np.ndarray,
+    E: int,
+    budget_frac: float,
+) -> np.ndarray:
+    """Per-iteration edge-allocation budgets for ACTIVE partitions only.
+
+    The continuum expansion speed of partition p is ∝ λ_p·|B_p|; one system
+    iteration allocates ~budget_frac·|E| edges split proportionally, with a
+    16-edge floor so tiny partitions still make progress.  Terminated
+    partitions get exactly 0 — the old ``np.maximum(16, ...)`` over the full
+    vector handed every partition DNE's hard threshold had already stopped a
+    nonzero budget floor."""
+    budgets = np.zeros(lam.shape[0], dtype=np.int64)
+    active = ~terminated
+    if not active.any():
+        return budgets
+    w = lam * np.maximum(bsize.astype(np.float64), 1.0)
+    w = np.where(active, w, 0.0)
+    w_norm = w / max(1e-12, float(w.sum()))
+    budgets[active] = np.maximum(
+        16, (budget_frac * E * w_norm[active])
+    ).astype(np.int64)
+    return budgets
+
+
+def _flush_sequence(nE: np.ndarray, K: int) -> np.ndarray:
+    """The partition sequence of ``for each of K edges: p = argmin(nE);
+    nE[p] += 1`` — computed in closed form instead of an O(K·P) Python loop.
+
+    The argmin-with-lowest-index-tiebreak greedy consumes "slots" in
+    lexicographic (level, partition) order, where partition p offers slots at
+    fill levels nE[p], nE[p]+1, ...; the answer is the first K slots of that
+    stream.  Bit-identical to the sequential loop by construction."""
+    P = int(nE.shape[0])
+    if K <= 0:
+        return np.zeros(0, dtype=np.int16)
+    nE = nE.astype(np.int64)
+    s_idx = np.argsort(nE, kind="stable")
+    s = nE[s_idx]
+    prefix = np.concatenate(([0], np.cumsum(s)))
+    # cap_at[i] = number of slots strictly below level s[i]
+    cap_at = np.arange(P, dtype=np.int64) * s - prefix[:P]
+    i = int(np.searchsorted(cap_at, K, side="right")) - 1
+    m = int(np.searchsorted(s, s[i], side="right"))  # parts with nE <= s[i]
+    extra = K - int(cap_at[i])
+    full_levels, rem = divmod(extra, m)
+    level = int(s[i]) + full_levels
+    fin = np.maximum(nE, level)
+    active_parts = np.sort(s_idx[:m])
+    fin[active_parts[:rem]] += 1
+    addc = fin - nE
+    part_rep = np.repeat(np.arange(P, dtype=np.int64), addc)
+    levels = np.repeat(nE, addc) + _ranges(addc)
+    order = np.lexsort((part_rep, levels))
+    return part_rep[order].astype(np.int16)
+
+
+class _TraceRecorder:
+    """Per-iteration convergence trace -> dict of stacked arrays."""
+
+    def __init__(self, enabled: bool):
+        self.enabled = enabled
+        self.remaining: list[int] = []
+        self.edge_counts: list[np.ndarray] = []
+        self.vertex_counts: list[np.ndarray] = []
+        self.lam: list[np.ndarray] = []
+
+    def record(self, remaining, nE, nV, lam) -> None:
+        if not self.enabled:
+            return
+        self.remaining.append(int(remaining))
+        self.edge_counts.append(nE.copy())
+        self.vertex_counts.append(nV.copy())
+        self.lam.append(lam.copy())
+
+    def build(self, P: int) -> dict | None:
+        if not self.enabled:
+            return None
+        if not self.remaining:
+            z = np.zeros((0, P), dtype=np.int64)
+            return {
+                "remaining": np.zeros(0, dtype=np.int64),
+                "edge_counts": z,
+                "vertex_counts": z,
+                "lam": np.zeros((0, P), dtype=np.float64),
+            }
+        return {
+            "remaining": np.asarray(self.remaining, dtype=np.int64),
+            "edge_counts": np.stack(self.edge_counts),
+            "vertex_counts": np.stack(self.vertex_counts),
+            "lam": np.stack(self.lam),
+        }
+
+
+# ---------------------------------------------------------------------------
+# the partitioner
+# ---------------------------------------------------------------------------
+
+
+class NeighborExpansionPartitioner(PartitionerBase):
+    """DistributedNE / AdaDNE behind the ``Partitioner`` protocol.
+
+    ``cfg`` supplies the algorithm knobs; ``partition(g, num_parts,
+    seed=...)`` overrides the legacy ``cfg.num_parts``/``cfg.seed`` defaults
+    per call and returns a scored :class:`PartitionPlan` (the raw edge
+    assignment lives in ``plan.edge_parts``)."""
+
+    def __init__(self, cfg: NEConfig | None = None, **overrides):
+        if cfg is None:
+            cfg = NEConfig(**overrides)
+        elif overrides:
+            cfg = dataclasses.replace(cfg, **overrides)
+        if cfg.mode not in NE_MODES:
+            raise ValueError(f"mode must be one of {NE_MODES}, got {cfg.mode!r}")
         if cfg.num_parts > 64:
             raise ValueError("bitmask implementation supports up to 64 partitions")
         self.cfg = cfg
 
-    # ------------------------------------------------------------------
-    def partition(self, g: HeteroGraph) -> np.ndarray:
-        cfg = self.cfg
-        P = cfg.num_parts
-        rng = np.random.default_rng(cfg.seed)
-        E, N = g.num_edges, g.num_vertices
+    @property
+    def name(self) -> str:
+        base = "adadne" if self.cfg.adaptive else "dne"
+        return base + ("_loop" if self.cfg.mode == "loop" else "")
 
-        # undirected incidence CSR: vertex -> (edge ids)
-        deg_out = g.out_degrees()
-        deg_in = g.in_degrees()
-        deg = deg_out + deg_in
-        inc_indptr = np.zeros(N + 1, dtype=np.int64)
-        np.cumsum(deg, out=inc_indptr[1:])
-        inc_eid = np.empty(2 * E, dtype=np.int64)
-        # fill out-edge slots then in-edge slots, vectorized per pass
-        inc_eid_list_ptr = inc_indptr[:-1].copy()
-        for arr_v, arr_e in ((g.src, np.arange(E)), (g.dst, np.arange(E))):
-            srt = np.argsort(arr_v, kind="stable")
-            vs = arr_v[srt]
-            es = arr_e[srt]
-            # contiguous runs per vertex
-            starts = np.searchsorted(vs, np.arange(N))
-            ends = np.searchsorted(vs, np.arange(N) + 1)
-            lens = ends - starts
-            dest = np.repeat(inc_eid_list_ptr, lens) + _ranges(lens)
-            inc_eid[dest] = es
-            inc_eid_list_ptr = inc_eid_list_ptr + lens
+    @property
+    def cache_token(self) -> str:
+        c = self.cfg
+        return (
+            f"{self.name}:lam0={c.lam0}:tau={c.tau}:alpha={c.alpha}"
+            f":beta={c.beta}:budget={c.budget_frac}:iters={c.max_iters}"
+        )
+
+    # ------------------------------------------------------------------
+    def partition(
+        self,
+        g: HeteroGraph,
+        num_parts: int | None = None,
+        *,
+        seed: int | None = None,
+        direction: str = DEFAULT_DIRECTION,
+    ) -> PartitionPlan:
+        cfg = self.cfg
+        P = int(num_parts) if num_parts is not None else int(cfg.num_parts)
+        if P <= 0:
+            raise ValueError(f"num_parts must be positive, got {P}")
+        if P > 64:
+            raise ValueError("bitmask implementation supports up to 64 partitions")
+        sd = int(cfg.seed if seed is None else seed)
+        run = self._run_loop if cfg.mode == "loop" else self._run_lockstep
+        edge_part, trace = run(g, P, sd)
+        assert (edge_part >= 0).all()
+        return PartitionPlan.from_assignment(
+            g,
+            edge_part,
+            P,
+            partitioner=self.name,
+            seed=sd,
+            iteration_trace=trace,
+        )
+
+    # ------------------------------------------------------------------
+    # lockstep (vectorized) mode
+    # ------------------------------------------------------------------
+    def _run_lockstep(
+        self, g: HeteroGraph, P: int, seed: int
+    ) -> tuple[np.ndarray, dict | None]:
+        cfg = self.cfg
+        rng = np.random.default_rng(seed)
+        E, N = g.num_edges, g.num_vertices
+        deg = g.out_degrees() + g.in_degrees()
+        inc_indptr, inc_eid = _incidence(g)
+        # static selection key: rank of (degree, vertex id) — pools kept
+        # sorted by it, so "smallest-degree-first" selection is a prefix cut
+        vertex_of_rank = np.lexsort((np.arange(N), deg))
+        rank = np.empty(N, dtype=np.int64)
+        rank[vertex_of_rank] = np.arange(N)
+        deg_by_rank = deg[vertex_of_rank]
+
         edge_part = np.full(E, -1, dtype=np.int16)
         mask = np.zeros(N, dtype=np.uint64)  # partition membership bitmask
+        in_boundary = np.zeros((P, N), dtype=bool)
+        # Per-partition candidate pools: sorted arrays of vertex RANKS (the
+        # rank is unique, so it IS the vertex via ``vertex_of_rank``).  A
+        # vertex enters a pool at most once (``in_boundary`` guard) and
+        # selection always consumes a prefix, so pools never hold already-
+        # expanded entries — no dense candidate matrices, no compaction.
+        pools: list[np.ndarray] = [np.zeros(0, dtype=np.int64) for _ in range(P)]
+        nE = np.zeros(P, dtype=np.int64)
+        nV = np.zeros(P, dtype=np.int64)
+        lam = np.full(P, cfg.lam0, dtype=np.float64)
+        terminated = np.zeros(P, dtype=bool)
+        Et = cfg.tau * E / P  # DNE hard threshold
+        trace = _TraceRecorder(cfg.trace)
+
+        seeds = rng.choice(N, size=P, replace=False)
+        for p, s in enumerate(seeds):
+            in_boundary[p, s] = True
+            pools[p] = rank[np.array([s], dtype=np.int64)]
+
+        remaining = E
+        it = 0
+        while remaining > 0 and it < cfg.max_iters:
+            it += 1
+            if cfg.adaptive:
+                tot_v, tot_e = max(1, nV.sum()), max(1, nE.sum())
+                vs = P * nV / tot_v
+                es = P * nE / tot_e
+                lam = lam * np.exp(cfg.alpha * (1.0 - vs) + cfg.beta * (1.0 - es))
+                np.clip(lam, 1e-4, 1.0, out=lam)
+            else:
+                terminated = nE > Et
+            active = ~terminated
+
+            bsize = np.fromiter(
+                (v.size for v in pools), dtype=np.int64, count=P
+            )
+            # reseed stalled active partitions from unallocated edges
+            need = np.flatnonzero(active & (bsize == 0))
+            if need.size:
+                un = np.flatnonzero(edge_part == -1)
+                if un.size:
+                    picks = g.src[un[rng.integers(0, un.size, size=need.size)]]
+                    for p, s in zip(need, picks):
+                        if not in_boundary[p, s]:
+                            in_boundary[p, s] = True
+                        pools[p] = rank[np.array([s], dtype=np.int64)]
+                        bsize[p] = 1
+            budgets = _iteration_budgets(lam, bsize, terminated, E, cfg.budget_frac)
+
+            # --- batched candidate selection -------------------------------
+            # All partitions select against the same snapshot: partition p
+            # takes the prefix of its rank-sorted pool limited by both
+            # k = max(1, λ_p·|B_p|) and the budget's cumulative-degree cut
+            # (identical ordering to the loop mode's stable degree argsort).
+            sel_chunks: list[np.ndarray] = []
+            sel_sizes: list[int] = []
+            act = np.flatnonzero(active & (bsize > 0))
+            for p in act:
+                c = pools[p]
+                k = min(c.size, max(1, int(lam[p] * c.size)))
+                cap = min(k, int(budgets[p]) + 1)
+                pre = c[:cap]
+                cut = int(
+                    np.searchsorted(
+                        np.cumsum(deg_by_rank[pre]), budgets[p], side="left"
+                    )
+                ) + 1
+                q = min(cap, cut)
+                sel_chunks.append(vertex_of_rank[pre[:q]])
+                sel_sizes.append(q)
+                pools[p] = c[q:]
+            progressed = False
+            if sel_chunks:
+                sv = np.concatenate(sel_chunks)
+                sp = np.repeat(act, sel_sizes)
+
+                # --- one-hop allocation with conflict resolution ----------
+                lens = inc_indptr[sv + 1] - inc_indptr[sv]
+                slots = np.repeat(inc_indptr[sv], lens) + _ranges(lens)
+                eids = inc_eid[slots]
+                owner = np.repeat(sp, lens)
+                free = edge_part[eids] == -1
+                eids, owner = eids[free], owner[free]
+                if eids.size:
+                    # per contested edge the lowest-|E_p| claimant wins,
+                    # ties to the lower partition id (lexsort key order)
+                    o = np.lexsort((owner, nE[owner], eids))
+                    es_, os_ = eids[o], owner[o]
+                    first = np.empty(es_.size, dtype=bool)
+                    first[0] = True
+                    first[1:] = es_[1:] != es_[:-1]
+                    win_e, win_p = es_[first], os_[first]
+                    edge_part[win_e] = win_p.astype(np.int16)
+                    nE += np.bincount(win_p, minlength=P)
+                    remaining -= win_e.size
+                    progressed = True
+
+                    # grouped membership + boundary update over unique
+                    # (partition, endpoint) pairs
+                    pv = np.concatenate([win_p, win_p])
+                    vv = np.concatenate([g.src[win_e], g.dst[win_e]])
+                    pk = np.unique(pv * np.int64(N) + vv)
+                    up = pk // N
+                    uv = pk % N
+                    bitv = np.left_shift(np.uint64(1), up.astype(np.uint64))
+                    fresh = (mask[uv] & bitv) == 0
+                    nV += np.bincount(up[fresh], minlength=P)
+                    # grouped OR into the membership bitmask (reduceat over
+                    # vertex-sorted runs — ufunc.at is an order slower)
+                    o2 = np.argsort(uv, kind="stable")
+                    vs2, bs2 = uv[o2], bitv[o2]
+                    heads = np.empty(vs2.size, dtype=bool)
+                    heads[0] = True
+                    heads[1:] = vs2[1:] != vs2[:-1]
+                    starts2 = np.flatnonzero(heads)
+                    mask[vs2[starts2]] |= np.bitwise_or.reduceat(bs2, starts2)
+                    # vertices never seen by p before join its boundary pool
+                    # (selected vertices are already in_boundary, so pools
+                    # stay free of expanded entries)
+                    newb = np.flatnonzero(~in_boundary[up, uv])
+                    in_boundary[up[newb], uv[newb]] = True
+                    # pairs are sorted by partition: one sorted-merge per pool
+                    ub, starts = np.unique(up[newb], return_index=True)
+                    stops = np.append(starts[1:], newb.size)
+                    for j, p in enumerate(ub):
+                        add_r = rank[uv[newb[starts[j] : stops[j]]]]
+                        add_r.sort()
+                        old = pools[p]
+                        out = np.empty(old.size + add_r.size, dtype=np.int64)
+                        idx = np.searchsorted(old, add_r) + np.arange(
+                            add_r.size
+                        )
+                        out[idx] = add_r
+                        keep_old = np.ones(out.size, dtype=bool)
+                        keep_old[idx] = False
+                        out[keep_old] = old
+                        pools[p] = out
+
+                    # --- two-hop allocation -------------------------------
+                    # a free edge can only gain a common partition when an
+                    # endpoint's membership CHANGED this round, and that
+                    # endpoint is then in uv[fresh] — scanning only those is
+                    # exhaustive and skips the re-gather of hub neighbor
+                    # lists every round
+                    touched = np.unique(uv[fresh])
+                    te = inc_eid[_gather_slots(inc_indptr, touched)]
+                    te = te[edge_part[te] == -1]
+                    if te.size:
+                        te = np.unique(te)
+                    if te.size:
+                        common = mask[g.src[te]] & mask[g.dst[te]]
+                        has = common != 0
+                        te, common = te[has], common[has]
+                        if te.size:
+                            bits = (
+                                (common[:, None] >> np.arange(P, dtype=np.uint64))
+                                & np.uint64(1)
+                            ).astype(bool)
+                            score = np.where(
+                                bits, nE[None, :], np.iinfo(np.int64).max
+                            )
+                            pick = np.argmin(score, axis=1)
+                            edge_part[te] = pick.astype(np.int16)
+                            nE += np.bincount(pick, minlength=P)
+                            remaining -= te.size
+
+            if cfg.verbose:
+                print(
+                    f"it={it} rem={remaining} nE={nE.tolist()} nV={nV.tolist()} "
+                    f"lam={np.round(lam, 4).tolist()}"
+                )
+            trace.record(remaining, nE, nV, lam)
+            if not progressed:
+                remaining = self._flush(edge_part, nE)
+        if remaining > 0:  # max_iters exhausted
+            self._flush(edge_part, nE)
+        return edge_part, trace.build(P)
+
+    # ------------------------------------------------------------------
+    # sequential (legacy reference) mode
+    # ------------------------------------------------------------------
+    def _run_loop(
+        self, g: HeteroGraph, P: int, seed: int
+    ) -> tuple[np.ndarray, dict | None]:
+        cfg = self.cfg
+        rng = np.random.default_rng(seed)
+        E, N = g.num_edges, g.num_vertices
+        deg = g.out_degrees() + g.in_degrees()
+        inc_indptr, inc_eid = _incidence(g)
+        edge_part = np.full(E, -1, dtype=np.int16)
+        mask = np.zeros(N, dtype=np.uint64)
         boundary = np.zeros((P, N), dtype=bool)
         expanded = np.zeros((P, N), dtype=bool)
         nE = np.zeros(P, dtype=np.int64)
         nV = np.zeros(P, dtype=np.int64)
         lam = np.full(P, cfg.lam0, dtype=np.float64)
         terminated = np.zeros(P, dtype=bool)
-        Et = cfg.tau * E / P  # DNE hard threshold
+        Et = cfg.tau * E / P
+        trace = _TraceRecorder(cfg.trace)
 
-        # initial seeds: distinct random vertices
         seeds = rng.choice(N, size=P, replace=False)
         for p, s in enumerate(seeds):
             boundary[p, s] = True
@@ -117,24 +507,14 @@ class NeighborExpansionPartitioner:
 
             progressed = False
             newly_touched: list[np.ndarray] = []
-            # Budget per partition this iteration.  The continuum expansion
-            # speed of partition p is proportional to λ_p·|B_p| (the number of
-            # vertices it expands); we discretize so one system iteration
-            # allocates ~budget_frac·|E| edges total, split across partitions
-            # proportionally to λ_p·|B_p|.  For DNE (λ constant) speed is then
-            # ∝ |B_p| with the hard threshold as the only balance control; for
-            # AdaDNE the adaptive λ_p modulates the speed (the soft constraint).
             bsize = np.array(
                 [
                     np.count_nonzero(boundary[p] & ~expanded[p])
                     for p in range(P)
                 ],
-                dtype=np.float64,
+                dtype=np.int64,
             )
-            w = lam * np.maximum(bsize, 1.0)
-            w[terminated] = 0.0
-            w_norm = w / max(1e-12, w.sum())
-            budgets = np.maximum(16, (cfg.budget_frac * E * w_norm)).astype(np.int64)
+            budgets = _iteration_budgets(lam, bsize, terminated, E, cfg.budget_frac)
             for p in range(P):
                 if terminated[p]:
                     continue
@@ -212,42 +592,47 @@ class NeighborExpansionPartitioner:
                     f"it={it} rem={remaining} nE={nE.tolist()} nV={nV.tolist()} "
                     f"lam={np.round(lam, 4).tolist()}"
                 )
+            trace.record(remaining, nE, nV, lam)
             if not progressed:
-                # stalled (e.g. all DNE partitions terminated): flush the rest
-                un = np.flatnonzero(edge_part == -1)
-                if un.shape[0] == 0:
-                    break
-                for e in un:
-                    p = int(np.argmin(nE))
-                    edge_part[e] = p
-                    nE[p] += 1
-                remaining = 0
-        assert (edge_part >= 0).all()
-        return edge_part
+                remaining = self._flush(edge_part, nE)
+        if remaining > 0:
+            self._flush(edge_part, nE)
+        return edge_part, trace.build(P)
+
+    # ------------------------------------------------------------------
+    @staticmethod
+    def _flush(edge_part: np.ndarray, nE: np.ndarray) -> int:
+        """Stall flush: spread every unallocated edge greedily onto the
+        least-loaded partition — the closed-form :func:`_flush_sequence`
+        replaces the old O(E·P) per-edge argmin loop bit-identically.
+        Returns the new ``remaining`` count (always 0)."""
+        un = np.flatnonzero(edge_part == -1)
+        if un.shape[0]:
+            seq = _flush_sequence(nE, un.shape[0])
+            edge_part[un] = seq
+            nE += np.bincount(seq, minlength=nE.shape[0])
+        return 0
 
 
-def _ranges(lens: np.ndarray) -> np.ndarray:
-    """[0..lens[0]) ++ [0..lens[1]) ++ ... as one array."""
-    if lens.shape[0] == 0:
-        return np.zeros(0, dtype=np.int64)
-    ends = np.cumsum(lens)
-    out = np.arange(ends[-1], dtype=np.int64)
-    out -= np.repeat(ends - lens, lens)
-    return out
-
-
-def _gather_slots(indptr: np.ndarray, verts: np.ndarray) -> np.ndarray:
-    """Concatenated CSR slot ranges of ``verts``."""
-    lens = indptr[verts + 1] - indptr[verts]
-    return np.repeat(indptr[verts], lens) + _ranges(lens)
+# ---------------------------------------------------------------------------
+# legacy free-function shims (kept one release of deprecation; they return
+# the RAW edge assignment — new call sites should use the registry entries,
+# which return a scored ``PartitionPlan``)
+# ---------------------------------------------------------------------------
 
 
 def distributed_ne(
-    g: HeteroGraph, num_parts: int, tau: float = 1.1, lam: float = 0.1, seed: int = 0
+    g: HeteroGraph,
+    num_parts: int,
+    tau: float = 1.1,
+    lam: float = 0.1,
+    seed: int = 0,
+    mode: str = "lockstep",
 ) -> np.ndarray:
+    """DEPRECATED: ``PARTITIONERS.get("dne").partition(...).edge_parts``."""
     return NeighborExpansionPartitioner(
-        NEConfig(num_parts=num_parts, adaptive=False, tau=tau, lam0=lam, seed=seed)
-    ).partition(g)
+        NEConfig(adaptive=False, tau=tau, lam0=lam, mode=mode)
+    ).partition(g, num_parts, seed=seed).edge_parts
 
 
 def adadne(
@@ -257,14 +642,9 @@ def adadne(
     alpha: float = 1.0,
     beta: float = 1.0,
     seed: int = 0,
+    mode: str = "lockstep",
 ) -> np.ndarray:
+    """DEPRECATED: ``PARTITIONERS.get("adadne").partition(...).edge_parts``."""
     return NeighborExpansionPartitioner(
-        NEConfig(
-            num_parts=num_parts,
-            adaptive=True,
-            lam0=lam,
-            alpha=alpha,
-            beta=beta,
-            seed=seed,
-        )
-    ).partition(g)
+        NEConfig(adaptive=True, lam0=lam, alpha=alpha, beta=beta, mode=mode)
+    ).partition(g, num_parts, seed=seed).edge_parts

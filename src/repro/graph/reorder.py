@@ -85,14 +85,47 @@ def reorder_permutation(
         assert indptr is not None and indices is not None
         if partition_ids is None:
             return bfs_order(indptr, indices, n, seed)
-        # BFS within each partition group, groups in partition order
+        # real BFS over each partition's INDUCED subgraph (symmetrized so a
+        # weakly-connected group is one BFS component), groups in partition
+        # order — replaces the old hub-first degree-sort approximation
         out = []
         for p in np.unique(partition_ids):
             members = np.flatnonzero(partition_ids == p)
-            # induced subgraph BFS via degree-sorted start; cheap approximation:
-            sub_order = members[
-                np.argsort(-degrees[members], kind="stable")
-            ]  # hub-first within part
-            out.append(sub_order)
+            sub_indptr, sub_indices = _induced_subgraph(
+                indptr, indices, members
+            )
+            local = bfs_order(
+                sub_indptr, sub_indices, members.shape[0], seed + int(p)
+            )
+            out.append(members[local])
         return np.concatenate(out)
     raise ValueError(f"unknown reorder algorithm {alg!r}")
+
+
+def _induced_subgraph(
+    indptr: np.ndarray, indices: np.ndarray, members: np.ndarray
+) -> tuple[np.ndarray, np.ndarray]:
+    """Symmetrized CSR of the subgraph induced by sorted ``members``
+    (local ids = positions in ``members``), fully vectorized."""
+    from repro.utils import csr_slots
+
+    m = members.shape[0]
+    lens = indptr[members + 1] - indptr[members]
+    if int(lens.sum()) == 0:
+        return np.zeros(m + 1, dtype=np.int64), np.zeros(0, dtype=np.int64)
+    nbrs = indices[csr_slots(indptr, members)]
+    srcs = np.repeat(np.arange(m, dtype=np.int64), lens)
+    # keep edges whose target is also a member; map to local ids
+    pos = np.searchsorted(members, nbrs)
+    pos = np.minimum(pos, m - 1)
+    keep = members[pos] == nbrs
+    u, v = srcs[keep], pos[keep]
+    # symmetrize so BFS coverage matches weak connectivity
+    uu = np.concatenate([u, v])
+    vv = np.concatenate([v, u])
+    order = np.argsort(uu, kind="stable")
+    uu, vv = uu[order], vv[order]
+    sub_indptr = np.zeros(m + 1, dtype=np.int64)
+    np.add.at(sub_indptr, uu + 1, 1)
+    np.cumsum(sub_indptr, out=sub_indptr)
+    return sub_indptr, vv

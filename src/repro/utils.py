@@ -23,6 +23,9 @@ __all__ = [
     "stable_hash64",
     "json_dump",
     "prefetch_iterator",
+    "concat_ranges",
+    "csr_slots",
+    "incidence_csr",
 ]
 
 _T = TypeVar("_T")
@@ -75,6 +78,52 @@ class Registry(Generic[_T]):
 
     def __len__(self) -> int:
         return len(self._entries)
+
+
+def concat_ranges(lens: np.ndarray) -> np.ndarray:
+    """``[0..lens[0]) ++ [0..lens[1]) ++ ...`` as one int64 array."""
+    if lens.shape[0] == 0:
+        return np.zeros(0, dtype=np.int64)
+    ends = np.cumsum(lens)
+    out = np.arange(ends[-1], dtype=np.int64)
+    out -= np.repeat(ends - lens, lens)
+    return out
+
+
+def csr_slots(indptr: np.ndarray, verts: np.ndarray) -> np.ndarray:
+    """Concatenated CSR slot ranges of ``verts`` (one repeat + one arange,
+    no per-vertex Python)."""
+    lens = indptr[verts + 1] - indptr[verts]
+    return np.repeat(indptr[verts], lens) + concat_ranges(lens)
+
+
+def incidence_csr(
+    num_vertices: int,
+    passes: list[tuple[np.ndarray, np.ndarray]],
+) -> tuple[np.ndarray, np.ndarray]:
+    """Vertex -> payload CSR built from ``(vertex_array, payload_array)``
+    passes, each filled vectorized in vertex-sorted runs.
+
+    The partition subsystem's two uses: undirected edge incidence
+    (``passes=[(src, eids), (dst, eids)]`` -> vertex's incident edge ids)
+    and undirected neighbor lists (``passes=[(src, dst), (dst, src)]``)."""
+    deg = np.zeros(num_vertices, dtype=np.int64)
+    for verts, _ in passes:
+        deg += np.bincount(verts, minlength=num_vertices)
+    indptr = np.zeros(num_vertices + 1, dtype=np.int64)
+    np.cumsum(deg, out=indptr[1:])
+    values = np.empty(indptr[-1], dtype=np.int64)
+    fill_ptr = indptr[:-1].copy()
+    for verts, payload in passes:
+        srt = np.argsort(verts, kind="stable")
+        vs = verts[srt]
+        ps = payload[srt]
+        starts = np.searchsorted(vs, np.arange(num_vertices))
+        ends = np.searchsorted(vs, np.arange(num_vertices) + 1)
+        lens = ends - starts
+        values[np.repeat(fill_ptr, lens) + concat_ranges(lens)] = ps
+        fill_ptr = fill_ptr + lens
+    return indptr, values
 
 
 def prefetch_iterator(it, depth: int):

@@ -132,3 +132,63 @@ def test_reorder_permutations(small_graph):
     pds = reorder_permutation("PDS", global_ids=gids, degrees=deg, partition_ids=pid)
     # PDS: partition ids non-decreasing; degree non-increasing within groups
     assert (np.diff(pid[pds]) >= 0).all()
+
+
+def _assert_bfs_visit_order(indptr, indices, members, order):
+    """``order`` must be a real BFS of the induced (symmetrized) subgraph:
+    components contiguous, and within a component the visit order follows
+    non-decreasing BFS layers from that component's first-visited vertex."""
+    assert sorted(order.tolist()) == sorted(members.tolist())
+    mset = set(int(v) for v in members)
+    adj = {v: set() for v in mset}
+    for v in mset:
+        for u in indices[indptr[v] : indptr[v + 1]]:
+            u = int(u)
+            if u in mset:
+                adj[v].add(u)
+                adj[u].add(v)
+    i, n = 0, len(order)
+    while i < n:
+        start = int(order[i])
+        level = {start: 0}
+        frontier = [start]
+        while frontier:
+            nxt = []
+            for v in frontier:
+                for u in adj[v]:
+                    if u not in level:
+                        level[u] = level[v] + 1
+                        nxt.append(u)
+            frontier = nxt
+        comp = set(level)
+        chunk = [int(v) for v in order[i : i + len(comp)]]
+        assert set(chunk) == comp, "BFS component not contiguous in order"
+        layers = [level[v] for v in chunk]
+        assert layers == sorted(layers), "visit order violates BFS layers"
+        i += len(comp)
+
+
+def test_bfs_reorder_within_partitions(small_graph):
+    """The within-partition reorder is a REAL induced-subgraph BFS (the old
+    code hub-first degree-sorted each group)."""
+    g = small_graph
+    indptr, order = g.out_csr()
+    indices = g.dst[order]
+    deg = g.out_degrees() + g.in_degrees()
+    pid = np.random.default_rng(3).integers(0, 4, g.num_vertices)
+    perm = reorder_permutation(
+        "BFS",
+        global_ids=np.arange(g.num_vertices),
+        degrees=deg,
+        partition_ids=pid,
+        indptr=indptr,
+        indices=indices,
+        seed=0,
+    )
+    assert sorted(perm.tolist()) == list(range(g.num_vertices))
+    # groups appear in ascending partition order
+    assert (np.diff(pid[perm]) >= 0).all()
+    for p in np.unique(pid):
+        members = np.flatnonzero(pid == p)
+        group = perm[pid[perm] == p]
+        _assert_bfs_visit_order(indptr, indices, members, group)
