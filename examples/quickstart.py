@@ -13,6 +13,8 @@ driven entirely through the unified facade (repro.api).
    overlaps the jit'd train step; the pipeline keeps `inflight` sample
    requests riding on the service at once)
 5. run layerwise full-graph inference with the two-level cache + PDS
+6. lint the library with the glint static analyzer (repro.analysis) —
+   the same determinism/JAX-hygiene gate CI runs
 """
 import tempfile
 import time
@@ -93,4 +95,21 @@ with tempfile.TemporaryDirectory() as td:
 print(f"   embeddings for all {g.num_vertices} vertices in {dt:.1f}s | "
       f"chunk reads {res.total_chunk_reads()} | "
       f"dynamic hit ratio {res.dynamic_hit_ratio():.2%}")
+
+print("== 6. static analysis (glint) ==")
+# The conventions everything above relies on — keyed randomness, stable
+# iteration orders, pure-jnp jit bodies, bucketed pad shapes — are
+# machine-checked by repro.analysis.  `run_checks` is the library entry
+# point behind `python -m repro.analysis src tests benchmarks examples`
+# (the CI gate); here we lint the analyzer's own package so the demo works
+# from any working directory.
+import os
+
+import repro.analysis
+from repro.analysis import run_checks
+
+report = run_checks([os.path.dirname(repro.analysis.__file__)])
+print(f"   {report.files_checked} files, {len(report.rule_ids)} rules -> "
+      f"{len(report.findings)} findings, {len(report.suppressed)} suppressed")
+assert report.ok, "\n".join(f.render() for f in report.findings)
 print("done.")

@@ -1,0 +1,64 @@
+"""``repro.analysis`` — determinism & JAX-hygiene static analysis (glint).
+
+A stdlib-``ast`` rule engine that machine-checks the conventions GLISP's
+correctness claims rest on: keyed randomness (no global RNG state), stable
+iteration orders, pure-jnp jit bodies, bucketed shapes, and the project's
+registry/shim discipline.  Gates CI via::
+
+    python -m repro.analysis src tests benchmarks examples
+
+and is a library like the other subsystems::
+
+    from repro.analysis import run_checks
+    report = run_checks(["src"])
+    assert report.ok, report.findings
+
+Per-line suppression: ``# glint: disable=DET001 -- justification`` (the
+justification is mandatory; E002 flags pragmas without one).  Add a rule
+by subclassing :class:`Rule` and decorating with ``@register_rule``.  The
+runtime companion
+:func:`recompile_guard` asserts the engine's one-compile-per-
+(layer, bucket) bound over any block of inference calls.
+"""
+from repro.analysis.core import (
+    PARSE_ERROR_ID,
+    PRAGMA_REASON_ID,
+    RULES,
+    SKIP_MARKER,
+    FileContext,
+    Finding,
+    Report,
+    Rule,
+    active_rules,
+    check_file,
+    check_source,
+    iter_python_files,
+    register_rule,
+    run_checks,
+)
+from repro.analysis.reporters import render_json, render_rule_catalog, render_text
+from repro.analysis.runtime import RecompileError, RecompileReport, recompile_guard
+import repro.analysis.rules  # noqa: F401  (registers every rule in RULES)
+
+__all__ = [
+    "RULES",
+    "Rule",
+    "Finding",
+    "FileContext",
+    "Report",
+    "SKIP_MARKER",
+    "PARSE_ERROR_ID",
+    "PRAGMA_REASON_ID",
+    "register_rule",
+    "active_rules",
+    "check_source",
+    "check_file",
+    "iter_python_files",
+    "run_checks",
+    "render_text",
+    "render_json",
+    "render_rule_catalog",
+    "RecompileError",
+    "RecompileReport",
+    "recompile_guard",
+]

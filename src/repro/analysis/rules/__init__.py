@@ -1,0 +1,2 @@
+"""Rule modules; importing this package registers every rule in ``RULES``."""
+from repro.analysis.rules import determinism, jax_hygiene, project  # noqa: F401

@@ -1,0 +1,310 @@
+"""JAX hygiene rules (JAX0xx).
+
+The bucketed inference engine's performance claim — one jit compile per
+(layer, bucket), one transfer each way per batch — survives only if traced
+code stays traced: no host syncs inside jit, no fresh jit caches per loop
+iteration, hashable static args, and padded shapes that come from the
+bucketers (power-of-two / quantum round-up), not raw data-dependent
+lengths.  Each rule here flags one way that contract erodes.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Rule, register_rule
+
+__all__ = [
+    "HostSyncInJit",
+    "JitInLoop",
+    "NonHashableStaticArg",
+    "UnbucketedPad",
+]
+
+# numpy dtype/scalar constructors that are legitimate inside traced code
+# (they build constants/dtypes, not host round-trips)
+_NP_OK_IN_JIT = {
+    "float16",
+    "float32",
+    "float64",
+    "int8",
+    "int16",
+    "int32",
+    "int64",
+    "uint8",
+    "uint16",
+    "uint32",
+    "uint64",
+    "bool_",
+    "dtype",
+    "pi",
+    "inf",
+    "nan",
+}
+
+_JIT_NAMES = ("jax.jit", "jax.pjit")
+
+
+def _static_safe(node, statics: set) -> bool:
+    """True when an expression is safe to concretize under jit: it reads
+    only static metadata (.shape/.ndim/.size/.dtype, len()) , static-arg
+    names, or constants — never traced array *values*."""
+    for n in ast.walk(node):
+        if isinstance(n, ast.Attribute) and n.attr in ("shape", "ndim", "size", "dtype"):
+            return True
+        if (
+            isinstance(n, ast.Call)
+            and isinstance(n.func, ast.Name)
+            and n.func.id == "len"
+        ):
+            return True
+    names = {n.id for n in ast.walk(node) if isinstance(n, ast.Name)}
+    return names <= statics
+
+
+@register_rule
+class HostSyncInJit(Rule):
+    id = "JAX001"
+    name = "host-sync-in-jit"
+    family = "jax"
+    rationale = (
+        ".item()/float()/bool()/np.asarray on a traced value forces a "
+        "device sync + host round trip at trace time and usually a "
+        "ConcretizationTypeError; inside a jit-compiled layer slice it "
+        "breaks the one-transfer-per-batch contract.  Keep jit bodies pure "
+        "jnp; concretize only static metadata (.shape, static args)."
+    )
+
+    def check(self, ctx: FileContext):
+        for fn, statics in ctx.jit_scopes.items():
+            args = fn.args
+            all_params = (
+                [a.arg for a in args.posonlyargs]
+                + [a.arg for a in args.args]
+                + [a.arg for a in args.kwonlyargs]
+            )
+            static_names = set(statics) | {
+                p for p in all_params if p in ("self", "cls")
+            }
+            for node in ast.walk(fn):
+                if not isinstance(node, ast.Call):
+                    continue
+                if isinstance(node.func, ast.Attribute) and node.func.attr in (
+                    "item",
+                    "tolist",
+                ):
+                    yield self.finding(
+                        ctx,
+                        node,
+                        f".{node.func.attr}() inside a jit-traced function "
+                        "forces a host sync",
+                    )
+                    continue
+                dn = ctx.resolve(node.func)
+                if dn and dn.startswith("numpy."):
+                    leaf = dn.split(".", 1)[1]
+                    if leaf not in _NP_OK_IN_JIT and not leaf.startswith("random."):
+                        yield self.finding(
+                            ctx,
+                            node,
+                            f"np.{leaf} inside a jit-traced function "
+                            "concretizes the tracer; use jnp",
+                        )
+                    continue
+                if (
+                    isinstance(node.func, ast.Name)
+                    and node.func.id in ("float", "int", "bool")
+                    and node.args
+                    and not _static_safe(node.args[0], static_names)
+                ):
+                    yield self.finding(
+                        ctx,
+                        node,
+                        f"{node.func.id}(...) on a (possibly traced) value "
+                        "inside a jit-traced function forces a host sync; "
+                        "only static metadata (.shape, static args) may be "
+                        "concretized",
+                    )
+
+
+@register_rule
+class JitInLoop(Rule):
+    id = "JAX002"
+    name = "jit-in-loop"
+    family = "jax"
+    rationale = (
+        "jax.jit(fn) inside a loop builds a fresh compilation cache every "
+        "iteration, so nothing is ever reused — the exact failure mode the "
+        "(layer, bucket) single-compile design exists to prevent.  Hoist "
+        "the jit out of the loop (the engine keys its jitted slices by "
+        "layer once, then reuses them for every bucket)."
+    )
+
+    def check(self, ctx: FileContext):
+        for call in ctx.calls():
+            dn = ctx.resolve(call.func)
+            is_jit = dn in _JIT_NAMES or (
+                dn == "functools.partial"
+                and call.args
+                and ctx.resolve(call.args[0]) in _JIT_NAMES
+            )
+            if not is_jit:
+                continue
+            for anc in ctx.ancestors(call):
+                if isinstance(anc, (ast.For, ast.AsyncFor, ast.While)):
+                    yield self.finding(
+                        ctx,
+                        call,
+                        "jax.jit called inside a loop recompiles every "
+                        "iteration; hoist it out and reuse the jitted "
+                        "callable",
+                    )
+                    break
+                if isinstance(anc, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    # a jit at function scope is the cached-per-object
+                    # pattern (e.g. the engine's per-layer slices); only
+                    # flag loops *inside* the same function
+                    break
+
+
+_MUTABLE_CALLS = {"list", "dict", "set", "bytearray"}
+
+
+def _mutable_literal(node) -> bool:
+    if isinstance(node, (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp, ast.SetComp)):
+        return True
+    return (
+        isinstance(node, ast.Call)
+        and isinstance(node.func, ast.Name)
+        and node.func.id in _MUTABLE_CALLS
+    )
+
+
+@register_rule
+class NonHashableStaticArg(Rule):
+    id = "JAX003"
+    name = "nonhashable-static-arg"
+    family = "jax"
+    rationale = (
+        "jit static args are hashed into the compilation-cache key; a "
+        "list/dict/set default (or argument) raises 'unhashable type' at "
+        "call time — or worse, a custom __hash__ silently aliases cache "
+        "entries.  Use tuples / frozen dataclasses for static args."
+    )
+
+    def check(self, ctx: FileContext):
+        for fn, statics in ctx.jit_scopes.items():
+            if not statics:
+                continue
+            args = fn.args
+            named = [a.arg for a in args.posonlyargs] + [a.arg for a in args.args]
+            # defaults align with the tail of the positional params
+            pos_defaults = list(zip(named[len(named) - len(args.defaults):], args.defaults))
+            kw_defaults = [
+                (a.arg, d)
+                for a, d in zip(args.kwonlyargs, args.kw_defaults)
+                if d is not None
+            ]
+            for pname, default in pos_defaults + kw_defaults:
+                if pname in statics and _mutable_literal(default):
+                    yield self.finding(
+                        ctx,
+                        default,
+                        f"static arg {pname!r} of a jit-compiled function "
+                        "has a non-hashable (mutable) default; use a tuple "
+                        "or frozen value",
+                    )
+
+
+# helpers whose output is an approved padded/bucketed length
+_BUCKET_HELPERS = {
+    "round_up",
+    "ceil_div",
+    "pow2_ceil",
+    "_pow2_ceil",
+    "_bucket",
+    "_vertex_bucket",
+    "_edge_bucket",
+    "next_power_of_2",
+    "bit_length",
+}
+_BUCKETY_NAME_PARTS = ("pad", "quantum", "bucket", "cap")
+_PAD_FNS = {"numpy.pad", "jax.numpy.pad"}
+
+
+@register_rule
+class UnbucketedPad(Rule):
+    id = "JAX004"
+    name = "unbucketed-pad"
+    family = "jax"
+    rationale = (
+        "Padding a jit input to a raw data-dependent length (x.shape[0], "
+        "len(batch), ...) makes every distinct input size a distinct "
+        "compiled program — unbounded recompilation.  Pad lengths must "
+        "come through the bucketers: round_up / _pow2_ceil / the engine's "
+        "_vertex_bucket/_edge_bucket, or an explicit quantum."
+    )
+
+    def check(self, ctx: FileContext):
+        for call in ctx.calls():
+            fn = call.func
+            dn = ctx.resolve(fn)
+            leaf = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None
+            )
+            if leaf == "pad_to" and len(call.args) >= 2:
+                if not self._bucketed(ctx, call, call.args[1]):
+                    yield self.finding(
+                        ctx,
+                        call.args[1],
+                        "pad_to length is a raw data-dependent value; route "
+                        "it through round_up/_pow2_ceil or a *_quantum so "
+                        "shapes stay bucketed",
+                    )
+            elif dn in _PAD_FNS and len(call.args) >= 2:
+                for expr in self._width_exprs(call.args[1]):
+                    if not self._bucketed(ctx, call, expr):
+                        yield self.finding(
+                            ctx,
+                            expr,
+                            "pad width is a raw data-dependent value; derive "
+                            "it from a bucketed length (round_up/_pow2_ceil) "
+                            "so shapes stay bucketed",
+                        )
+
+    @staticmethod
+    def _width_exprs(widths):
+        """Non-constant leaf expressions of a pad-width spec."""
+        if isinstance(widths, (ast.Tuple, ast.List)):
+            for el in widths.elts:
+                yield from UnbucketedPad._width_exprs(el)
+        elif not isinstance(widths, ast.Constant):
+            yield widths
+
+    def _bucketed(self, ctx: FileContext, call, expr, depth: int = 1) -> bool:
+        """An expression produces a bucketed length if any term is a
+        constant-only expression, an approved helper call, ceil-style
+        floor-div/shift arithmetic, a bucket-named variable, or (one level
+        deep) a name assigned from one of those."""
+        if isinstance(expr, ast.Constant):
+            return True
+        for n in ast.walk(expr):
+            if isinstance(n, (ast.FloorDiv, ast.LShift)):
+                return True
+            if isinstance(n, ast.Call):
+                f = n.func
+                leaf = f.attr if isinstance(f, ast.Attribute) else (
+                    f.id if isinstance(f, ast.Name) else None
+                )
+                if leaf in _BUCKET_HELPERS:
+                    return True
+            if isinstance(n, ast.Name) and any(
+                part in n.id.lower() for part in _BUCKETY_NAME_PARTS
+            ):
+                return True
+        if depth > 0:
+            for n in ast.walk(expr):
+                if isinstance(n, ast.Name):
+                    rhs = ctx.name_assignment(call, n.id)
+                    if rhs is not None and self._bucketed(ctx, call, rhs, depth - 1):
+                        return True
+        return False

@@ -1,0 +1,248 @@
+"""Project-invariant rules (PRJ0xx).
+
+These encode GLISP-repo conventions the earlier PRs established: errors
+are never swallowed silently outside finalizers, deprecated shims are for
+*external* callers only (library code uses the replacement surfaces), and
+every registry key a config or call site names must actually be registered
+— config validation and the live registries must not drift.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Rule, register_rule
+
+__all__ = [
+    "SilentExceptPass",
+    "DeprecatedShimCall",
+    "ConfigRegistryDrift",
+]
+
+
+_BROAD = {"Exception", "BaseException"}
+
+
+def _is_broad(handler: ast.ExceptHandler) -> bool:
+    t = handler.type
+    if t is None:
+        return True
+    if isinstance(t, ast.Name):
+        return t.id in _BROAD
+    if isinstance(t, ast.Tuple):
+        return any(isinstance(e, ast.Name) and e.id in _BROAD for e in t.elts)
+    return False
+
+
+def _body_is_silent(body) -> bool:
+    for stmt in body:
+        if isinstance(stmt, ast.Pass):
+            continue
+        if isinstance(stmt, ast.Expr) and isinstance(stmt.value, ast.Constant):
+            continue  # docstring / `...`
+        return False
+    return True
+
+
+@register_rule
+class SilentExceptPass(Rule):
+    id = "PRJ001"
+    name = "silent-except-pass"
+    family = "project"
+    rationale = (
+        "`except Exception: pass` swallows every failure — including the "
+        "determinism bugs the rest of this analyzer looks for — with no "
+        "trace.  Narrow to the exceptions the block can actually raise and "
+        "log them; only __del__ finalizers (where raising is unusable) are "
+        "exempt."
+    )
+
+    def check(self, ctx: FileContext):
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.ExceptHandler):
+                continue
+            if not (_is_broad(node) and _body_is_silent(node.body)):
+                continue
+            fn = ctx.enclosing_function(node)
+            if fn is not None and fn.name == "__del__":
+                continue
+            yield self.finding(
+                ctx,
+                node,
+                "broad except with a silent body swallows all errors; "
+                "narrow the exception types and log at debug "
+                "(only __del__ is exempt)",
+            )
+
+
+# deprecated surfaces (kept one release for external callers) and the shim
+# modules that define them — the only library files allowed to mention them
+_SHIM_CALLS = {
+    "adadne": "PARTITIONERS.get('adadne').partition(...)",
+    "distributed_ne": "PARTITIONERS.get('dne').partition(...)",
+    "TwoLevelCache": "repro.core.storage.HybridCache",
+    "ChunkedEmbeddingStore": "repro.core.storage.DFSTier",
+}
+_SHIM_FILES = (
+    "repro/core/partition/dne.py",
+    "repro/core/inference/cache.py",
+    "repro/core/inference/store.py",
+    "repro/core/storage/store.py",
+    "repro/core/sampling/service.py",
+    "repro/api/backends.py",
+)
+
+
+@register_rule
+class DeprecatedShimCall(Rule):
+    id = "PRJ002"
+    name = "deprecated-shim-call"
+    family = "project"
+    rationale = (
+        "backend.sample(), TwoLevelCache, ChunkedEmbeddingStore and the "
+        "free-function partitioners survive only as deprecation shims for "
+        "external callers.  Library code calling a shim re-entrenches the "
+        "old surface and dodges the replacements' contracts (keyed submit, "
+        "tiered storage, PartitionPlan scorecards)."
+    )
+
+    def check(self, ctx: FileContext):
+        if not ctx.is_library:
+            return
+        if ctx.path.endswith(_SHIM_FILES):
+            return
+        for call in ctx.calls():
+            fn = call.func
+            leaf = fn.attr if isinstance(fn, ast.Attribute) else (
+                fn.id if isinstance(fn, ast.Name) else None
+            )
+            if leaf in _SHIM_CALLS:
+                yield self.finding(
+                    ctx,
+                    call,
+                    f"{leaf} is a deprecated shim; library code should use "
+                    f"{_SHIM_CALLS[leaf]}",
+                )
+            elif isinstance(fn, ast.Attribute) and fn.attr == "sample":
+                yield self.finding(
+                    ctx,
+                    call,
+                    ".sample(...) is the deprecated submit-and-wait shim; "
+                    "library code should submit(seeds, spec, key=...) and "
+                    "take ticket.result()",
+                )
+
+
+# config field -> registry holding its legal values
+_FIELD_REGISTRIES = {
+    "partitioner": "PARTITIONERS",
+    "sampler": "SAMPLERS",
+    "reorder": "REORDERS",
+    "cache_policy": "CACHE_POLICIES",
+    "storage_tiers": "STORAGE_TIERS",
+}
+
+
+@register_rule
+class ConfigRegistryDrift(Rule):
+    id = "PRJ003"
+    name = "config-registry-drift"
+    family = "project"
+    rationale = (
+        "GLISPConfig's registry-named fields and any literal "
+        "REGISTRY.get('name') lookup are promises about what is "
+        "registered; when a registry entry is renamed the promise silently "
+        "breaks at a distant call site.  This rule resolves every literal "
+        "key against the *live* registries at lint time."
+    )
+
+    def _registries(self) -> dict | None:
+        try:
+            from repro.api import backends
+        except ImportError:
+            return None  # analyzing a foreign tree: nothing to resolve
+        return {
+            name: getattr(backends, name)
+            for name in sorted(set(_FIELD_REGISTRIES.values()))
+            if hasattr(backends, name)
+        }
+
+    def check(self, ctx: FileContext):
+        registries = None
+        for node in ast.walk(ctx.tree):
+            # literal lookups: PARTITIONERS.get("name") anywhere
+            if isinstance(node, ast.Call):
+                fn = node.func
+                if (
+                    isinstance(fn, ast.Attribute)
+                    and fn.attr == "get"
+                    and isinstance(fn.value, ast.Name)
+                    and fn.value.id in _FIELD_REGISTRIES.values()
+                    and node.args
+                    and isinstance(node.args[0], ast.Constant)
+                    and isinstance(node.args[0].value, str)
+                ):
+                    if self._in_raises_block(ctx, node):
+                        continue  # tests asserting the unknown-key error
+                    if registries is None:
+                        registries = self._registries()
+                        if registries is None:
+                            return
+                    reg = registries.get(fn.value.id)
+                    key = node.args[0].value
+                    if reg is not None and key not in reg:
+                        yield self.finding(
+                            ctx,
+                            node.args[0],
+                            f"{fn.value.id}.get({key!r}): no such entry "
+                            f"(registered: {', '.join(reg.names())})",
+                        )
+            # GLISPConfig field defaults
+            elif isinstance(node, ast.ClassDef) and node.name == "GLISPConfig":
+                if registries is None:
+                    registries = self._registries()
+                    if registries is None:
+                        return
+                yield from self._check_defaults(ctx, node, registries)
+
+    @staticmethod
+    def _in_raises_block(ctx, node) -> bool:
+        for anc in ctx.ancestors(node):
+            if isinstance(anc, (ast.With, ast.AsyncWith)):
+                for item in anc.items:
+                    ce = item.context_expr
+                    if (
+                        isinstance(ce, ast.Call)
+                        and ctx.resolve(ce.func) == "pytest.raises"
+                    ):
+                        return True
+        return False
+
+    def _check_defaults(self, ctx, cls, registries):
+        for stmt in cls.body:
+            if not (
+                isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)
+                and stmt.value is not None
+            ):
+                continue
+            reg = registries.get(_FIELD_REGISTRIES.get(stmt.target.id, ""))
+            if reg is None:
+                continue
+            values = (
+                stmt.value.elts
+                if isinstance(stmt.value, (ast.Tuple, ast.List))
+                else [stmt.value]
+            )
+            for v in values:
+                if (
+                    isinstance(v, ast.Constant)
+                    and isinstance(v.value, str)
+                    and v.value not in reg
+                ):
+                    yield self.finding(
+                        ctx,
+                        v,
+                        f"GLISPConfig.{stmt.target.id} default {v.value!r} "
+                        f"is not registered "
+                        f"(registered: {', '.join(reg.names())})",
+                    )

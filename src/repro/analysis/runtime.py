@@ -1,0 +1,78 @@
+"""Runtime companion to the static pass: the jit-recompile guard.
+
+The static rules keep *new* code from introducing shape leaks; this guard
+checks the claim at runtime — the bucketed inference engine compiles each
+(layer, vertex-bucket, edge-bucket) slice at most once over the engine's
+lifetime.  The engine counts actual retraces (the wrapped python callable
+runs once per jit cache miss), so the guard compares observed compiles
+against the number of *new* distinct shape triples in the guarded region:
+
+    with recompile_guard(system) as rec:
+        system.infer_layerwise(layer_fns, workdir)
+        system.infer_layerwise(layer_fns, workdir)   # same shapes: 0 compiles
+    assert rec.compiles == rec.new_shapes
+
+Accepts a :class:`LayerwiseInferenceEngine` or a :class:`GLISPSystem`
+(whose cached ``infer_engine`` may not exist until the first call inside
+the guard).
+"""
+from __future__ import annotations
+
+from contextlib import contextmanager
+from dataclasses import dataclass
+
+__all__ = ["RecompileError", "RecompileReport", "recompile_guard"]
+
+
+class RecompileError(AssertionError):
+    """The bucketed engine compiled more slices than it saw new shapes."""
+
+
+@dataclass
+class RecompileReport:
+    """Filled in when the guarded block exits cleanly."""
+
+    compiles: int = 0  # jit retraces observed in the guarded region
+    new_shapes: int = 0  # new distinct (layer, Bp, Ep) triples in region
+    bound: int = 0  # allowed compiles: new_shapes + extra
+
+
+def _engine_of(target):
+    """The engine holding the jit caches: the target itself, or a
+    GLISPSystem's cached engine (None before the first inference call)."""
+    if target is None or hasattr(target, "jit_trace_count"):
+        return target
+    return getattr(target, "infer_engine", None)
+
+
+def _counters(target) -> tuple[int, int]:
+    engine = _engine_of(target)
+    if engine is None:
+        return 0, 0
+    return engine.jit_trace_count(), engine.shape_count()
+
+
+@contextmanager
+def recompile_guard(target, *, extra: int = 0):
+    """Assert the one-compile-per-(layer, bucket) bound over a block.
+
+    ``extra`` widens the bound for intentional recompiles (e.g. an engine
+    rebuilt with different jit options mid-guard).  Raises
+    :class:`RecompileError` on a clean exit that exceeded the bound; the
+    yielded :class:`RecompileReport` carries the counts either way."""
+    report = RecompileReport()
+    traces0, shapes0 = _counters(target)
+    yield report
+    traces1, shapes1 = _counters(target)
+    # an engine swapped mid-guard starts its counters at zero; clamp the
+    # baseline so the comparison stays on the live engine's cache
+    report.compiles = traces1 - min(traces0, traces1)
+    report.new_shapes = shapes1 - min(shapes0, shapes1)
+    report.bound = report.new_shapes + extra
+    if report.compiles > report.bound:
+        raise RecompileError(
+            f"bucketed engine compiled {report.compiles} jit slice(s) for "
+            f"{report.new_shapes} new (layer, bucket) shape(s) "
+            f"(bound {report.bound}): a shape is leaking past the bucketer "
+            "or a jit cache is being rebuilt"
+        )

@@ -37,6 +37,7 @@ read workload counters with ``prefetch=0`` pipelines.
 from __future__ import annotations
 
 import collections
+import logging
 import multiprocessing as mp
 import os
 import queue as queue_mod
@@ -55,6 +56,8 @@ from repro.models.gnn.batching import GNNBatch, subgraph_to_batch
 from repro.utils import prefetch_iterator
 
 __all__ = ["BatchPipeline"]
+
+_log = logging.getLogger(__name__)
 
 _FORK_AVAILABLE = os.name == "posix" and "fork" in mp.get_all_start_methods()
 
@@ -352,8 +355,10 @@ class BatchPipeline:
             try:
                 self._cmd_q.put(("stop",))
                 proc.join(timeout=2)
-            except Exception:
-                pass
+            except (OSError, ValueError) as exc:
+                # command queue already torn down (closed pipe / released
+                # semaphore); fall through to terminate() below
+                _log.debug("graceful worker stop failed: %s", exc)
             if proc.is_alive():
                 proc.terminate()
 

@@ -54,6 +54,10 @@ class GLISPSystem:
     reorder_perm: np.ndarray | None = field(default=None, repr=False)
     pipeline_seconds: dict = field(default_factory=dict, repr=False)
     _metrics: dict | None = field(default=None, repr=False)
+    # (signature, engine, pinned refs) for infer_layerwise reuse: repeat
+    # calls with the same resolved parameters hit the same engine, so its
+    # jitted (layer, bucket) slices never recompile across calls
+    _infer_cache: tuple | None = field(default=None, repr=False)
 
     # ------------------------------------------------------------------
     @classmethod
@@ -157,8 +161,13 @@ class GLISPSystem:
         weighted: bool | None = None,
         direction: str | None = None,
         replace: bool | None = None,
+        key=None,
     ):
-        """Blocking convenience: ``submit(...).result()``."""
+        """Blocking convenience: ``submit(...).result()``.
+
+        Pass ``key=`` to pin the request's RNG key; without it the service
+        assigns a sequence key (fine for a lone blocking caller, not for
+        code sharing the service with other submitters)."""
         return self.submit(
             seeds,
             spec,
@@ -166,6 +175,7 @@ class GLISPSystem:
             weighted=weighted,
             direction=direction,
             replace=replace,
+            key=key,
         ).result()
 
     def partition_metrics(self) -> dict:
@@ -314,7 +324,12 @@ class GLISPSystem:
 
         ``mode``/``jit``/``use_kernel``/``edge_buckets`` control the
         device-resident bucketed execution path (see ``GLISPConfig``'s
-        ``infer_*`` fields for the defaults)."""
+        ``infer_*`` fields for the defaults).
+
+        Repeat calls with the same resolved parameters (and the *same*
+        ``layer_fns``/``feats`` objects) reuse one engine, so jitted
+        (layer, bucket) slices carry over and nothing recompiles — the
+        property ``repro.analysis.recompile_guard`` asserts."""
         from repro.core.inference.engine import LayerwiseInferenceEngine
 
         if not isinstance(self.backend, GatherApplyBackend):
@@ -328,16 +343,13 @@ class GLISPSystem:
             # follow the config like every other facade method; a config
             # with fewer fanouts than layers falls back to the engine default
             fanouts = cfg.fanouts[: len(layer_fns)]
-        engine = LayerwiseInferenceEngine(
-            self.graph,
-            self.client,
-            layer_fns,
-            self.graph.vertex_feats if feats is None else feats,
-            workdir,
-            fanouts=list(fanouts) if fanouts is not None else None,
-            reorder_alg=REORDERS.get(reorder or cfg.reorder),
+        feats_arr = self.graph.vertex_feats if feats is None else feats
+        resolved = dict(
+            workdir=workdir,
+            fanouts=tuple(fanouts) if fanouts is not None else None,
+            reorder=reorder or cfg.reorder,
             chunk_rows=chunk_rows if chunk_rows is not None else cfg.chunk_rows,
-            policy=CACHE_POLICIES.get(cache_policy or cfg.cache_policy),
+            cache_policy=cache_policy or cfg.cache_policy,
             storage_tiers=(
                 tuple(storage_tiers)
                 if storage_tiers is not None
@@ -355,10 +367,10 @@ class GLISPSystem:
                 batch_size if batch_size is not None else cfg.infer_batch_size
             ),
             direction=cfg.direction,
-            out_dims=out_dims,
+            out_dims=tuple(out_dims) if out_dims is not None else None,
             seed=cfg.seed,
             mode=mode if mode is not None else cfg.infer_mode,
-            use_jit=jit if jit is not None else cfg.infer_jit,
+            jit=jit if jit is not None else cfg.infer_jit,
             use_kernel=(
                 use_kernel if use_kernel is not None else cfg.infer_use_kernel
             ),
@@ -368,4 +380,44 @@ class GLISPSystem:
                 else cfg.infer_edge_buckets
             ),
         )
+        # identity (not value) for the unhashables: reusing the compiled
+        # slices is only sound for the very same layer callables/features
+        sig = (
+            tuple(resolved.items()),
+            tuple(id(fn) for fn in layer_fns),
+            id(feats_arr),
+        )
+        if self._infer_cache is not None and self._infer_cache[0] == sig:
+            return self._infer_cache[1].run()
+        engine = LayerwiseInferenceEngine(
+            self.graph,
+            self.client,
+            layer_fns,
+            feats_arr,
+            workdir,
+            fanouts=list(fanouts) if fanouts is not None else None,
+            reorder_alg=REORDERS.get(resolved["reorder"]),
+            chunk_rows=resolved["chunk_rows"],
+            policy=CACHE_POLICIES.get(resolved["cache_policy"]),
+            storage_tiers=resolved["storage_tiers"],
+            tier_capacities=resolved["tier_capacities"],
+            dynamic_frac=resolved["dynamic_frac"],
+            batch_size=resolved["batch_size"],
+            direction=resolved["direction"],
+            out_dims=out_dims,
+            seed=resolved["seed"],
+            mode=resolved["mode"],
+            use_jit=resolved["jit"],
+            use_kernel=resolved["use_kernel"],
+            edge_buckets=resolved["edge_buckets"],
+        )
+        # pin layer_fns/feats so the id()s in the signature stay valid
+        self._infer_cache = (sig, engine, (list(layer_fns), feats_arr))
         return engine.run()
+
+    @property
+    def infer_engine(self):
+        """The engine behind the last ``infer_layerwise`` call (None before
+        the first); exposes ``jit_trace_count()``/``shape_count()`` for
+        ``repro.analysis.recompile_guard``."""
+        return self._infer_cache[1] if self._infer_cache is not None else None

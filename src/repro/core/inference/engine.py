@@ -234,6 +234,11 @@ class LayerwiseInferenceEngine:
         self.edge_buckets = tuple(edge_buckets) if edge_buckets else ()
         self._jitted: dict = {}  # layer k -> jit'd slice (shape-keyed inside)
         self._shapes_seen: set = set()  # (layer, Bp, Ep) -> compile counter
+        # lifetime views for repro.analysis.recompile_guard: actual traces
+        # of each jit'd slice, and every (layer, Bp, Ep) ever executed
+        # (never cleared, unlike _shapes_seen which resets per run)
+        self._trace_counts: dict = {}
+        self._shapes_lifetime: set = set()
 
     # -- shape bucketing ------------------------------------------------
     def _vertex_bucket(self, b: int) -> int:
@@ -261,8 +266,27 @@ class LayerwiseInferenceEngine:
                 and "use_kernel" in inspect.signature(jf).parameters
             ):
                 jf = functools.partial(jf, use_kernel=self.use_kernel)
-            self._jitted[k] = jax.jit(jf)
+
+            # every jit cache miss re-traces the Python callable, so a
+            # counting wrapper *under* jax.jit observes exactly the
+            # compiles (recompile_guard asserts this against the
+            # (layer, bucket) bound)
+            def traced(*args, _jf=jf, _k=k):
+                self._trace_counts[_k] = self._trace_counts.get(_k, 0) + 1
+                return _jf(*args)
+
+            self._jitted[k] = jax.jit(traced)
         return self._jitted[k]
+
+    def jit_trace_count(self) -> int:
+        """Total times any layer slice was traced (== jit compiles) over
+        the engine's lifetime.  ``repro.analysis.recompile_guard`` diffs
+        this against ``shape_count()`` to catch unbounded recompilation."""
+        return sum(self._trace_counts.values())
+
+    def shape_count(self) -> int:
+        """Distinct (layer, vertex-bucket, edge-bucket) triples ever run."""
+        return len(self._shapes_lifetime)
 
     # -- tiered storage -------------------------------------------------
     def _build_cache(self, store: DFSTier) -> HybridCache:
@@ -433,6 +457,7 @@ class LayerwiseInferenceEngine:
         if key not in self._shapes_seen:
             self._shapes_seen.add(key)
             result.slice_compiles += 1
+        self._shapes_lifetime.add(key)
         hs = np.zeros((bp, h_self.shape[1]), h_self.dtype)
         hs[:b] = h_self
         hn = np.zeros((ep, h_nbr.shape[1]), h_nbr.dtype)

@@ -740,6 +740,8 @@ class SamplingService:
         spec = SamplingSpec(
             fanouts=tuple(fanouts), weighted=weighted, direction=direction
         )
+        # glint: disable=DET004 -- deprecated shim keeps the legacy
+        # sequence-key behavior its remaining external callers rely on
         return self.submit(seeds, spec).result()
 
     # -- stats ---------------------------------------------------------

@@ -110,6 +110,8 @@ def _causal_conv(x, w, state=None):
     state: [B, W-1, C] trailing context (decode).  Returns (y, new_state)."""
     width = w.shape[0]
     if state is None:
+        # glint: disable=JAX004 -- conv kernel width is an architecture
+        # constant (weight shape), not a data-dependent length
         xp = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
     else:
         xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)

@@ -1,0 +1,18 @@
+"""DET001: process-global RNG state."""
+import random
+
+import numpy as np
+
+
+def bad(n):
+    x = np.random.rand(n)  # expect[DET001]
+    np.random.seed(0)  # expect[DET001]
+    random.shuffle(x)  # expect[DET001]
+    return x + random.random()  # expect[DET001]
+
+
+def good(n, seed):
+    rng = np.random.default_rng(seed)
+    ss = np.random.SeedSequence(seed)
+    py = random.Random(seed)
+    return rng.random(n), ss.spawn(1), py.random()

@@ -1,0 +1,20 @@
+"""DET002: hash-order set iteration leaking into values."""
+import numpy as np
+
+
+def bad(items, other):
+    out = list({x for x in items})  # expect[DET002]
+    for v in set(items):  # expect[DET002]
+        out.append(v)
+    pairs = [(v, 1) for v in set(other)]  # expect[DET002]
+    arr = np.array(set(items))  # expect[DET002]
+    text = ",".join({str(x) for x in items})  # expect[DET002]
+    return out, pairs, arr, text
+
+
+def good(items):
+    for v in sorted(set(items)):
+        yield v
+    # order-free reductions over sets are fine
+    n = len(set(items))
+    yield n, max(set(items)), np.unique(np.asarray(items))

@@ -1,0 +1,22 @@
+"""DET003: wall clock / OS entropy / listing order feeding values."""
+import glob
+import os
+import time
+import uuid
+
+
+def bad(d):
+    stamp = time.time()  # expect[DET003]
+    names = os.listdir(d)  # expect[DET003]
+    chunks = glob.glob(f"{d}/*.bin")  # expect[DET003]
+    run_id = uuid.uuid4()  # expect[DET003]
+    return stamp, names, chunks, run_id
+
+
+def good(d):
+    if not os.listdir(d):
+        return []
+    t0 = time.perf_counter()
+    files = sorted(glob.glob(f"{d}/*.bin"))
+    assert os.listdir(d)
+    return files, len(os.listdir(d)), time.perf_counter() - t0

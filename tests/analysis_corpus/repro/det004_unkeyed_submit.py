@@ -1,0 +1,17 @@
+"""DET004: service submits without a caller-owned RNG key (library-scoped:
+this file sits under a repro/ directory on purpose)."""
+
+
+def bad(service, seeds, spec):
+    return service.submit(seeds, spec)  # expect[DET004]
+
+
+def also_bad(submit, seeds):
+    return submit(seeds)  # expect[DET004]
+
+
+def good(service, seeds, spec, key, kwargs):
+    a = service.submit(seeds, spec, key=key)
+    b = service.submit(seeds, spec, **kwargs)  # key may ride in kwargs
+    c = service.submit()  # no request payload: not a sample submission
+    return a, b, c

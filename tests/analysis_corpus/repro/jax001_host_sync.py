@@ -1,0 +1,45 @@
+"""JAX001: host syncs / tracer concretization inside jit-traced code."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_item(x):
+    return x.sum().item()  # expect[JAX001]
+
+
+@functools.partial(jax.jit, static_argnames=("n",))
+def bad_np(x, n):
+    y = np.asarray(x)  # expect[JAX001]
+    return y * n
+
+
+@jax.jit
+def bad_float(x):
+    return float(x)  # expect[JAX001]
+
+
+def _slice(h):
+    return np.square(h)  # expect[JAX001]
+
+
+def layer(h):
+    return h * 2
+
+
+# the engine jits whatever hangs off ``.jax`` — the project convention
+layer.jax = _slice
+
+
+@jax.jit
+def good(x, y):
+    scale = float(x.shape[0])  # static metadata: fine
+    return jnp.dot(x, y) / scale, np.float32(0.5)
+
+
+def host_side(x):
+    # not jit-traced: host round-trips are allowed
+    return float(np.asarray(x).sum())

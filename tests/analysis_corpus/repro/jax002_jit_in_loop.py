@@ -1,0 +1,27 @@
+"""JAX002: fresh jit caches built inside loops."""
+import functools
+
+import jax
+
+
+def bad(fns, xs):
+    outs = []
+    for f in fns:
+        outs.append(jax.jit(f)(xs))  # expect[JAX002]
+    k = 0
+    while k < len(fns):
+        g = functools.partial(jax.jit, static_argnames=("n",))(fns[k])  # expect[JAX002]
+        outs.append(g(xs, n=2))
+        k += 1
+    return outs
+
+
+def good(fns, xs):
+    jitted = [jax.jit(f) for f in fns]  # hoisted: one cache per fn
+    return [jf(xs) for jf in jitted]
+
+
+class Engine:
+    def slice_fn(self, f):
+        # cached-per-object pattern (the inference engine): fine
+        return jax.jit(f)

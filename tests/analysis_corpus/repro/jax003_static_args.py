@@ -1,0 +1,24 @@
+"""JAX003: non-hashable defaults on jit static args."""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def bad(x, opts=[]):  # expect[JAX003]
+    return x * len(opts)
+
+
+@functools.partial(jax.jit, static_argnames=("shape",))
+def bad_kwonly(x, *, shape={}):  # expect[JAX003]
+    return x.reshape(tuple(shape))
+
+
+@functools.partial(jax.jit, static_argnames=("opts",))
+def good(x, opts=()):
+    return x * len(opts)
+
+
+@jax.jit
+def no_statics(x, opts=[]):  # mutable default, but not a static arg
+    return x

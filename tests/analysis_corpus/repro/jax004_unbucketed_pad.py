@@ -1,0 +1,22 @@
+"""JAX004: jit-input padding to raw data-dependent lengths."""
+import jax.numpy as jnp
+
+from repro.utils import pad_to, round_up
+
+
+def bad(x, batch):
+    a = pad_to(x, x.shape[0])  # expect[JAX004]
+    b = pad_to(x, len(batch))  # expect[JAX004]
+    n = x.shape[0]
+    c = jnp.pad(x, ((0, n - x.shape[0]), (0, 0)))  # expect[JAX004]
+    return a, b, c
+
+
+def good(x, batch, edge_quantum):
+    a = pad_to(x, round_up(x.shape[0], 64))
+    b = pad_to(x, edge_quantum)
+    m = x.shape[0]
+    m_pad = -(-m // 128) * 128  # ceil-style floor-div: bucketed
+    c = jnp.pad(x, ((0, m_pad - m), (0, 0)))
+    d = jnp.pad(x, ((0, 3), (0, 0)))
+    return a, b, c, d

@@ -1,0 +1,34 @@
+"""PRJ001: broad excepts with silent bodies."""
+import logging
+
+_log = logging.getLogger(__name__)
+
+
+def bad(risky):
+    try:
+        risky()
+    except Exception:  # expect[PRJ001]
+        pass
+    try:
+        risky()
+    except (ValueError, BaseException):  # expect[PRJ001]
+        ...
+
+
+def good(risky):
+    try:
+        risky()
+    except (OSError, ValueError) as exc:  # narrow: fine even if silent-ish
+        _log.debug("risky failed: %s", exc)
+    try:
+        risky()
+    except Exception:
+        _log.warning("risky failed")  # broad but not silent
+
+
+class Holder:
+    def __del__(self):
+        try:
+            self.close()
+        except Exception:  # finalizers may not raise
+            pass

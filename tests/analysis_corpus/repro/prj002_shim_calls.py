@@ -1,0 +1,18 @@
+"""PRJ002: deprecated shims called from library code (this file sits under
+a repro/ directory, and is not one of the shim-defining modules)."""
+from repro.core.inference import ChunkedEmbeddingStore, TwoLevelCache
+from repro.core.partition import adadne
+
+
+def bad(backend, seeds, g):
+    cache = TwoLevelCache(4, 2)  # expect[PRJ002]
+    store = ChunkedEmbeddingStore("/tmp/x", 8, 4, 2)  # expect[PRJ002]
+    ep = adadne(g, 4, seed=0)  # expect[PRJ002]
+    sub = backend.sample(seeds)  # expect[PRJ002]
+    return cache, store, ep, sub
+
+
+def good(backend, seeds, spec, key, PARTITIONERS):
+    ep = PARTITIONERS.get("adadne").partition(seeds, 4, seed=0)
+    ticket = backend.submit(seeds, spec, key=key)
+    return ep, ticket.result()

@@ -1,0 +1,23 @@
+"""PRJ003: literal registry keys that do not exist in the live registries."""
+import pytest
+
+from repro.api.backends import CACHE_POLICIES, PARTITIONERS, REORDERS
+
+
+def bad():
+    pol = CACHE_POLICIES.get("nope")  # expect[PRJ003]
+    part = PARTITIONERS.get("metis-5000")  # expect[PRJ003]
+    return pol, part
+
+
+class GLISPConfig:  # drifted copy: defaults must resolve
+    partitioner: str = "adadne"
+    cache_policy: str = "missing-policy"  # expect[PRJ003]
+
+
+def good():
+    pol = CACHE_POLICIES.get("fifo")
+    ro = REORDERS.get("pds")
+    with pytest.raises(ValueError):
+        CACHE_POLICIES.get("nope")  # asserting the error path: fine
+    return pol, ro

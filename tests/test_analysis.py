@@ -1,0 +1,326 @@
+"""repro.analysis: the glint static analyzer and its runtime companion.
+
+Four layers of coverage:
+
+1. **Corpus exactness** — every file in ``tests/analysis_corpus/repro/``
+   annotates its expected findings inline (``# expect[DET001]``); the
+   engine must produce *exactly* that set of (line, rule) pairs, so a
+   missed finding and a false positive both fail.
+2. **Engine mechanics** — suppression pragmas (trailing, standalone-line,
+   justification enforcement via E002), rule selection, skip markers,
+   parse-error reporting, reporters and the CLI gate's exit codes.
+3. **Self-gate** — the analyzer runs clean over this repository (the same
+   invocation CI gates on).
+4. **Runtime guard** — ``recompile_guard`` arithmetic over a fake engine
+   (the real-engine regression lives in tests/test_inference.py).
+"""
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (
+    PARSE_ERROR_ID,
+    PRAGMA_REASON_ID,
+    RULES,
+    RecompileError,
+    active_rules,
+    check_source,
+    check_file,
+    iter_python_files,
+    recompile_guard,
+    render_json,
+    render_rule_catalog,
+    render_text,
+    run_checks,
+)
+from repro.analysis.__main__ import main
+
+REPO = Path(__file__).resolve().parents[1]
+CORPUS_DIR = REPO / "tests" / "analysis_corpus"
+CORPUS = sorted((CORPUS_DIR / "repro").glob("*.py"))
+
+_EXPECT = re.compile(r"#\s*expect\[([A-Z0-9,]+)\]")
+
+
+def _expected_findings(source: str) -> set:
+    out = set()
+    for lineno, line in enumerate(source.splitlines(), 1):
+        m = _EXPECT.search(line)
+        if m:
+            for rid in m.group(1).split(","):
+                out.add((lineno, rid))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# corpus: exact (line, rule) agreement per file
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("path", CORPUS, ids=lambda p: p.stem)
+def test_corpus_exact(path):
+    source = path.read_text()
+    expected = _expected_findings(source)
+    assert expected, f"{path.name} has no expect[] annotations"
+    findings, suppressed = check_file(path)
+    assert not suppressed, "corpus files must not carry suppressions"
+    got = {(f.line, f.rule) for f in findings}
+    missed = expected - got
+    false_pos = got - expected
+    assert got == expected, (
+        f"{path.name}: missed={sorted(missed)} false_positives="
+        f"{sorted(false_pos)}\n" + "\n".join(f.render() for f in findings)
+    )
+
+
+def test_every_rule_has_a_fixture():
+    """Each registered rule is exercised by at least one known-bad line."""
+    covered = set()
+    for path in CORPUS:
+        covered |= {rid for _, rid in _expected_findings(path.read_text())}
+    registered = {r.id for r in active_rules()}
+    assert covered == registered, (
+        f"rules without corpus fixtures: {sorted(registered - covered)}; "
+        f"fixtures for unknown rules: {sorted(covered - registered)}"
+    )
+
+
+def test_rule_catalog_metadata():
+    rules = active_rules()
+    assert len(rules) >= 8
+    ids = [r.id for r in rules]
+    assert len(ids) == len(set(ids))
+    for r in rules:
+        assert r.family in ("determinism", "jax", "project")
+        assert r.rationale.strip()
+        assert re.fullmatch(r"[A-Z]{3}\d{3}", r.id)
+
+
+# ---------------------------------------------------------------------------
+# engine mechanics
+# ---------------------------------------------------------------------------
+
+_BAD = "import numpy as np\nx = np.random.rand(3)\n"
+
+
+def test_trailing_suppression_with_reason():
+    src = _BAD.replace(
+        "rand(3)", "rand(3)  # glint: disable=DET001 -- demo snippet"
+    )
+    findings, suppressed = check_source(src)
+    assert not findings
+    assert [f.rule for f in suppressed] == ["DET001"]
+
+
+def test_suppression_without_reason_is_flagged():
+    src = _BAD.replace("rand(3)", "rand(3)  # glint: disable=DET001")
+    findings, _ = check_source(src)
+    assert [f.rule for f in findings] == [PRAGMA_REASON_ID]
+
+
+def test_standalone_pragma_covers_next_code_line():
+    src = (
+        "import numpy as np\n"
+        "# glint: disable=DET001 -- standalone pragma, multi-line reason\n"
+        "# continues here\n"
+        "x = np.random.rand(3)\n"
+    )
+    findings, suppressed = check_source(src)
+    assert not findings
+    assert [f.rule for f in suppressed] == ["DET001"]
+
+
+def test_bare_disable_suppresses_all_rules():
+    src = (
+        "import numpy as np\n"
+        "x = np.random.rand(3)  # glint: disable -- kitchen sink\n"
+    )
+    findings, suppressed = check_source(src)
+    assert not findings and len(suppressed) == 1
+
+
+def test_pragma_for_other_rule_does_not_suppress():
+    src = _BAD.replace("rand(3)", "rand(3)  # glint: disable=JAX001 -- wrong id")
+    findings, _ = check_source(src)
+    assert [f.rule for f in findings] == ["DET001"]
+
+
+def test_select_and_ignore_filters():
+    two_bugs = "import numpy as np\nimport time\nx = np.random.rand(int(time.time()))\n"
+    all_rules = {f.rule for f in check_source(two_bugs)[0]}
+    assert all_rules == {"DET001", "DET003"}
+    only_det1 = check_source(two_bugs, rules=active_rules(select=["DET001"]))[0]
+    assert {f.rule for f in only_det1} == {"DET001"}
+    by_family = check_source(two_bugs, rules=active_rules(ignore=["determinism"]))[0]
+    assert not by_family
+
+
+def test_parse_error_is_reported_not_raised():
+    findings, _ = check_source("def broken(:\n")
+    assert [f.rule for f in findings] == [PARSE_ERROR_ID]
+
+
+def test_skip_marker_prunes_directory_scans():
+    files = iter_python_files([CORPUS_DIR])
+    assert files == [], "corpus must be invisible to directory scans"
+    # but explicitly named files are always checked
+    assert iter_python_files([CORPUS[0]]) == [CORPUS[0]]
+
+
+def test_import_alias_resolution():
+    src = "from numpy import random as nr\nx = nr.rand(3)\n"
+    findings, _ = check_source(src)
+    assert [f.rule for f in findings] == ["DET001"]
+
+
+# ---------------------------------------------------------------------------
+# reporters + CLI
+# ---------------------------------------------------------------------------
+
+
+def test_reporters_roundtrip():
+    report = run_checks([CORPUS[0]])
+    assert not report.ok and report.files_checked == 1
+    text = render_text(report)
+    assert f"{report.findings[0].line}" in text and "finding(s)" in text
+    data = json.loads(render_json(report))
+    assert data["ok"] is False
+    assert data["counts"] and data["findings"]
+    assert {f["rule"] for f in data["findings"]} <= set(data["rules"])
+    assert "DET001" in render_rule_catalog()
+
+
+def test_cli_gate_exit_codes(tmp_path, capsys):
+    bad = CORPUS[0]
+    assert main([str(bad)]) == 1
+    clean = tmp_path / "clean.py"
+    clean.write_text("x = 1\n")
+    assert main([str(clean)]) == 0
+    assert main(["--list-rules"]) == 0
+    out = tmp_path / "report.json"
+    assert main([str(bad), "--format", "json", "--out", str(out)]) == 1
+    data = json.loads(out.read_text())
+    assert data["ok"] is False and data["findings"]
+    capsys.readouterr()
+
+
+def test_cli_select_ignore(tmp_path):
+    bad = CORPUS[0]  # det001 fixture
+    assert main([str(bad), "--ignore", "DET001"]) == 0
+    assert main([str(bad), "--select", "jax"]) == 0
+    assert main([str(bad), "--select", "determinism"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# the self-gate: this repository lints clean (CI runs the same invocation)
+# ---------------------------------------------------------------------------
+
+
+def test_repository_is_glint_clean():
+    report = run_checks(
+        [REPO / "src", REPO / "tests", REPO / "benchmarks", REPO / "examples"]
+    )
+    assert report.files_checked > 50
+    assert report.ok, "tree has unsuppressed findings:\n" + "\n".join(
+        f.render() for f in report.findings
+    )
+
+
+# ---------------------------------------------------------------------------
+# config <-> registry cross-validation (the live counterpart of PRJ003)
+# ---------------------------------------------------------------------------
+
+
+def test_config_accepts_exactly_the_registered_names():
+    from repro.api import backends
+    from repro.api.config import GLISPConfig
+
+    field_regs = {
+        "partitioner": backends.PARTITIONERS,
+        "sampler": backends.SAMPLERS,
+        "reorder": backends.REORDERS,
+        "cache_policy": backends.CACHE_POLICIES,
+    }
+    defaults = GLISPConfig()
+    for fname, reg in field_regs.items():
+        assert getattr(defaults, fname) in reg  # default is registered
+        for name in reg.names():  # every registered name validates
+            defaults.replace(**{fname: name}).validate()
+        with pytest.raises(ValueError):
+            defaults.replace(**{fname: "not-a-registered-name"}).validate()
+    for tier in defaults.storage_tiers:
+        assert tier in backends.STORAGE_TIERS
+    for name in backends.STORAGE_TIERS.names():
+        defaults.replace(storage_tiers=(name,)).validate()
+    with pytest.raises(ValueError):
+        defaults.replace(storage_tiers=("not-a-tier",)).validate()
+
+
+# ---------------------------------------------------------------------------
+# recompile_guard arithmetic (fake engine; real engine in test_inference.py)
+# ---------------------------------------------------------------------------
+
+
+class _FakeEngine:
+    def __init__(self):
+        self.traces = 0
+        self.shapes = set()
+
+    def jit_trace_count(self):
+        return self.traces
+
+    def shape_count(self):
+        return len(self.shapes)
+
+    def run_batch(self, key):
+        if key not in self.shapes:  # jit cache semantics: miss -> trace
+            self.shapes.add(key)
+            self.traces += 1
+
+
+class _FakeSystem:
+    def __init__(self):
+        self.infer_engine = None
+
+
+def test_recompile_guard_ok_within_bound():
+    eng = _FakeEngine()
+    with recompile_guard(eng) as rec:
+        eng.run_batch((0, 64, 256))
+        eng.run_batch((1, 64, 256))
+    assert (rec.compiles, rec.new_shapes, rec.bound) == (2, 2, 2)
+
+
+def test_recompile_guard_raises_on_shape_leak():
+    eng = _FakeEngine()
+    with pytest.raises(RecompileError, match="2 jit slice"):
+        with recompile_guard(eng):
+            eng.run_batch((0, 64, 256))
+            eng.traces += 1  # a retrace with no new shape: the leak
+    # extra= widens the bound for intentional recompiles
+    eng2 = _FakeEngine()
+    with recompile_guard(eng2, extra=1):
+        eng2.run_batch((0, 64, 256))
+        eng2.traces += 1
+
+
+def test_recompile_guard_only_counts_the_guarded_region():
+    eng = _FakeEngine()
+    eng.run_batch((0, 64, 256))  # before the guard: not counted
+    with recompile_guard(eng) as rec:
+        eng.run_batch((0, 64, 256))  # cache hit: no trace
+        eng.run_batch((1, 64, 256))  # one new shape, one compile
+    assert (rec.compiles, rec.new_shapes) == (1, 1)
+
+
+def test_recompile_guard_accepts_system_with_late_engine():
+    sys_like = _FakeSystem()
+    with recompile_guard(sys_like) as rec:
+        sys_like.infer_engine = eng = _FakeEngine()  # built mid-guard
+        eng.run_batch((0, 64, 256))
+    assert (rec.compiles, rec.new_shapes) == (1, 1)
+    with recompile_guard(None) as rec0:  # no engine at all: a no-op guard
+        pass
+    assert rec0.compiles == 0

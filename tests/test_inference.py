@@ -201,3 +201,38 @@ def test_pds_reduces_chunk_reads(small_graph, sampling_client, layers, tmp_path)
             s.cache.fill_chunks for s in res.layer_stats
         )
     assert reads["PDS"] <= reads["NS"], reads
+
+
+def test_engine_reuse_no_recompile_across_calls(small_graph, tmp_path):
+    """Repeat ``infer_layerwise`` calls with identical arguments reuse one
+    engine (GLISPSystem caches it by resolved-parameter signature), so the
+    second call re-runs entirely out of the jit caches: zero retraces,
+    which ``recompile_guard`` asserts against the (layer, bucket) bound."""
+    import jax
+
+    from repro.analysis import recompile_guard
+    from repro.api import GLISPConfig, GLISPSystem
+    from repro.models.gnn import GNNModel
+
+    system = GLISPSystem.build(
+        small_graph, GLISPConfig(num_parts=4, fanouts=(8, 4))
+    )
+    model = GNNModel("sage", 16, hidden=16, num_layers=2)
+    params = model.init(jax.random.PRNGKey(0))
+    fns = [model.embed_layer_fn(params, k) for k in range(2)]
+    wd = str(tmp_path / "emb")
+    kw = dict(chunk_rows=128, out_dims=[16, 16], batch_size=512)
+    assert system.infer_engine is None
+    with recompile_guard(system) as rec:
+        system.infer_layerwise(fns, wd, **kw)
+        engine = system.infer_engine
+        assert engine is not None and engine.jit_trace_count() > 0
+        with recompile_guard(system) as rec2:
+            system.infer_layerwise(fns, wd, **kw)
+        assert system.infer_engine is engine  # same engine, same jit caches
+        assert (rec2.compiles, rec2.new_shapes) == (0, 0)
+    assert rec.compiles == rec.new_shapes > 0
+
+    # a different resolved signature must NOT reuse the cached engine
+    system.infer_layerwise(fns, str(tmp_path / "emb2"), **kw)
+    assert system.infer_engine is not engine
