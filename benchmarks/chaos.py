@@ -1,0 +1,229 @@
+"""Fault-injection overhead and recovery benchmarks.
+
+Three measurements on identical keyed request streams:
+
+- **failover** — a clean system vs one whose primary replicas are forced
+  down mid-run (``server.*.0`` burst faults, two replicas per partition).
+  Retry and failover redraw from per-dispatch keyed RNG, so both runs MUST
+  produce bit-identical subgraphs; we report the wall-clock overhead of
+  rerouting plus the retry/failover counters from ``service.stats()``.
+- **recovery** — a process-mode ``BatchPipeline`` whose prefetch worker is
+  SIGKILLed mid-epoch; we time the respawn-and-replay gap until the next
+  batch arrives and check the full batch stream against a fault-free run.
+- **overhead** — sampling with no fault machinery vs an armed-but-silent
+  plan (``p=0.0`` everywhere).  The injection hooks must cost <2% when
+  disabled; the assertion allows generous CI-timing slack.
+
+Results land in ``BENCH_faults.json`` (``--out``); ``--smoke`` shrinks the
+workload for CI (mirroring ``BENCH_sampling.json``).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import multiprocessing
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit
+
+RESULTS: dict = {}
+
+FANOUTS = (10, 5)
+FORK = "fork" in multiprocessing.get_all_start_methods()
+
+
+def _emit(name: str, value: float) -> None:
+    RESULTS[name] = float(value)
+    emit(name, value)
+
+
+def _flag(name: str, ok: bool) -> None:
+    RESULTS[name] = bool(ok)
+    emit(name, 1.0 if ok else 0.0)
+
+
+def _build(g, parts: int, **overrides):
+    from repro.api import GLISPConfig, GLISPSystem
+
+    return GLISPSystem.build(
+        g, GLISPConfig(num_parts=parts, fanouts=FANOUTS, seed=0, **overrides)
+    )
+
+
+def _same_subgraph(a, b) -> bool:
+    if len(a.hops) != len(b.hops):
+        return False
+    return all(
+        np.array_equal(ha.src, hb.src) and np.array_equal(ha.dst, hb.dst)
+        for ha, hb in zip(a.hops, b.hops)
+    )
+
+
+def _seed_batches(g, num_batches: int, batch: int):
+    rng = np.random.default_rng(0)
+    return [
+        np.sort(rng.choice(g.num_vertices, batch, replace=False))
+        for _ in range(num_batches)
+    ]
+
+
+def _sample_all(system, batches, tag: int):
+    from repro.api import SamplingSpec
+
+    spec = SamplingSpec(fanouts=FANOUTS)
+    t0 = time.perf_counter()
+    subs = [
+        system.submit(s, spec, key=(tag, i)).result(timeout=30.0)
+        for i, s in enumerate(batches)
+    ]
+    return subs, time.perf_counter() - t0
+
+
+def bench_failover(g, parts: int, batches) -> None:
+    from repro.api import FaultPlan, FaultSpec, RetryPolicy
+
+    clean = _build(g, parts, server_replicas=2)
+    subs_clean, wall_clean = _sample_all(clean, batches, 0xFA11)
+
+    # every primary replica fails in long bursts: the circuit breaker trips
+    # and traffic reroutes to replica 1, which must redraw the same samples
+    plan = FaultPlan(
+        seed=7, sites=(("server.*.0", FaultSpec(p=0.3, burst=8, limit=8)),)
+    )
+    chaotic = _build(
+        g,
+        parts,
+        server_replicas=2,
+        fault_plan=plan,
+        retry_policy=RetryPolicy(max_attempts=4, base_delay_s=0.0),
+    )
+    subs_chaos, wall_chaos = _sample_all(chaotic, batches, 0xFA11)
+
+    identical = all(
+        _same_subgraph(a, b) for a, b in zip(subs_clean, subs_chaos)
+    )
+    _flag("failover/bit_identical", identical)
+    stats = chaotic.service.stats()
+    _emit("failover/retries", stats.retries)
+    _emit("failover/failovers", stats.failovers)
+    _emit("failover/clean_wall_s", wall_clean)
+    _emit("failover/chaos_wall_s", wall_chaos)
+    _emit("failover/latency_overhead", wall_chaos / max(wall_clean, 1e-9))
+    _flag("failover/exercised", stats.failovers > 0)
+
+
+def bench_recovery(g, parts: int) -> None:
+    from repro.api.pipeline import BatchPipeline
+
+    _flag("recovery/fork_available", FORK)
+    if not FORK:
+        return
+
+    def _pipe(system, **kw):
+        return BatchPipeline(
+            system.backend,
+            g,
+            np.arange(0, 512),
+            list(FANOUTS),
+            len(FANOUTS),
+            batch_size=64,
+            seed=3,
+            **kw,
+        )
+
+    ref = []
+    for seeds, batch in _pipe(_build(g, parts), prefetch=0).batches(1):
+        ref.append((np.asarray(seeds).copy(), np.asarray(batch.feats).copy()))
+
+    got = []
+    gap = 0.0
+    pipe = _pipe(_build(g, parts), prefetch=1, workers="process")
+    try:
+        kill_at = len(ref) // 2
+        t_kill = None
+        for i, (seeds, batch) in enumerate(pipe.batches(1)):
+            if t_kill is not None:
+                gap = time.perf_counter() - t_kill
+                t_kill = None
+            got.append(
+                (np.asarray(seeds).copy(), np.asarray(batch.feats).copy())
+            )
+            if i == kill_at:
+                pipe._proc.kill()  # simulate an OOM-killed prefetch worker
+                t_kill = time.perf_counter()
+    finally:
+        pipe.close()
+
+    identical = len(got) == len(ref) and all(
+        np.array_equal(sa, sb) and np.array_equal(fa, fb)
+        for (sa, fa), (sb, fb) in zip(ref, got)
+    )
+    _flag("recovery/bit_identical", identical)
+    _emit("recovery/respawns", pipe.respawn_count)
+    _emit("recovery/respawn_gap_s", gap)
+
+
+def bench_overhead_disabled(g, parts: int, batches) -> None:
+    from repro.api import FaultPlan, FaultSpec, RetryPolicy
+
+    bare = _build(g, parts)
+    _sample_all(bare, batches, 0x0FF)  # warm caches/JIT before timing
+    subs_bare, wall_bare = _sample_all(bare, batches, 0x0FF)
+
+    # armed plan that never fires: every injection hook runs, no faults
+    silent = _build(
+        g,
+        parts,
+        fault_plan=FaultPlan(seed=1, sites=(("*", FaultSpec(p=0.0)),)),
+        retry_policy=RetryPolicy(max_attempts=3),
+    )
+    _sample_all(silent, batches, 0x0FF)
+    subs_silent, wall_silent = _sample_all(silent, batches, 0x0FF)
+
+    identical = all(
+        _same_subgraph(a, b) for a, b in zip(subs_bare, subs_silent)
+    )
+    _flag("overhead/bit_identical", identical)
+    _emit("overhead/bare_wall_s", wall_bare)
+    _emit("overhead/armed_wall_s", wall_silent)
+    ratio = wall_silent / max(wall_bare, 1e-9)
+    _emit("overhead/armed_over_bare", ratio)
+    # target <1.02; assert with generous slack for noisy CI runners
+    _flag("overhead/within_budget", ratio <= 1.15)
+
+
+def run(smoke: bool = False, out_json: str | None = "BENCH_faults.json"):
+    scale = 0.02 if smoke else 0.10
+    parts = 4
+    num_batches = 8 if smoke else 32
+    batch = 128 if smoke else 512
+    g = dataset("wikikg90m", scale=scale, feat_dim=8)
+    batches = _seed_batches(g, num_batches, batch)
+
+    bench_failover(g, parts, batches)
+    bench_recovery(g, parts)
+    bench_overhead_disabled(g, parts, batches)
+
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(RESULTS, fh, indent=2, sort_keys=True)
+        print(f"wrote {out_json}")
+    assert RESULTS["failover/bit_identical"], "failover result diverged"
+    assert RESULTS["failover/exercised"], "chaos plan never forced a failover"
+    assert RESULTS["overhead/bit_identical"], "armed-but-silent run diverged"
+    assert RESULTS["overhead/within_budget"], (
+        "disabled-injection overhead exceeded budget: "
+        f"{RESULTS['overhead/armed_over_bare']:.3f}x"
+    )
+    if RESULTS["recovery/fork_available"]:
+        assert RESULTS["recovery/bit_identical"], "respawned run diverged"
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI workload")
+    ap.add_argument("--out", default="BENCH_faults.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_json=args.out)

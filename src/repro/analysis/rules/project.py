@@ -16,6 +16,7 @@ __all__ = [
     "SilentExceptPass",
     "DeprecatedShimCall",
     "ConfigRegistryDrift",
+    "BlockingWaitNoTimeout",
 ]
 
 
@@ -246,3 +247,58 @@ class ConfigRegistryDrift(Rule):
                         f"is not registered "
                         f"(registered: {', '.join(reg.names())})",
                     )
+
+
+def _queue_like(recv: ast.expr) -> bool:
+    """Does the receiver *name* look like a queue (``q``, ``cmd_q``,
+    ``work_queue``, ``self._data_q``)?  Name-based on purpose: dict.get
+    and registry .get calls stay out of scope."""
+    name = None
+    if isinstance(recv, ast.Name):
+        name = recv.id
+    elif isinstance(recv, ast.Attribute):
+        name = recv.attr
+    if name is None:
+        return False
+    low = name.lower()
+    return low == "q" or low.endswith("_q") or "queue" in low
+
+
+@register_rule
+class BlockingWaitNoTimeout(Rule):
+    id = "PRJ004"
+    name = "blocking-wait-no-timeout"
+    family = "project"
+    rationale = (
+        "a bare ticket.result() or queue.get() in library code blocks "
+        "forever when the producing server/worker dies — exactly the hang "
+        "the fault-tolerance layer exists to prevent.  Pass timeout= "
+        "(timeout=None is fine: it states the unbounded wait is deliberate "
+        "or defers to a configured deadline) so a dead peer surfaces as an "
+        "exception instead of a wedged process."
+    )
+
+    def check(self, ctx: FileContext):
+        if not ctx.is_library:
+            return
+        for call in ctx.calls():
+            fn = call.func
+            if not isinstance(fn, ast.Attribute):
+                continue
+            if call.args or any(kw.arg == "timeout" for kw in call.keywords):
+                continue
+            if fn.attr == "result":
+                yield self.finding(
+                    ctx,
+                    call,
+                    ".result() without timeout= blocks forever if the "
+                    "request never completes; pass timeout= (None to defer "
+                    "to the configured deadline)",
+                )
+            elif fn.attr == "get" and _queue_like(fn.value):
+                yield self.finding(
+                    ctx,
+                    call,
+                    "queue .get() without timeout= hangs if the producer "
+                    "died; poll with timeout= and check the worker is alive",
+                )

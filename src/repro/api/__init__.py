@@ -26,10 +26,18 @@ from repro.api.config import GLISPConfig
 from repro.api.pipeline import BatchPipeline
 from repro.api.registry import Registry
 from repro.api.system import GLISPSystem
+from repro.core.faults import (
+    CircuitBreaker,
+    FaultPlan,
+    FaultSpec,
+    InjectedFault,
+    RetryPolicy,
+)
 from repro.core.sampling.service import (
     DEFAULT_DIRECTION,
     SampleRequest,
     SampleTicket,
+    SampleTimeout,
     SamplingService,
     SamplingSpec,
 )
@@ -58,7 +66,13 @@ __all__ = [
     "SamplingSpec",
     "SampleRequest",
     "SampleTicket",
+    "SampleTimeout",
     "SamplingService",
+    "CircuitBreaker",
+    "FaultPlan",
+    "FaultSpec",
+    "InjectedFault",
+    "RetryPolicy",
     "ArrayFeatureSource",
     "DFSTier",
     "FeatureSource",

@@ -206,6 +206,10 @@ def _build_gather_apply(
         seed=config.seed,
         coalesce=config.coalesce,
         max_server_batch=config.max_server_batch,
+        replicas=config.server_replicas,
+        fault_plan=config.fault_plan,
+        retry_policy=config.retry_policy,
+        ticket_timeout=config.ticket_timeout,
     )
     return GatherApplyBackend(service)
 
@@ -231,6 +235,10 @@ def _build_edge_cut(
         seed=config.seed,
         coalesce=config.coalesce,
         max_server_batch=config.max_server_batch,
+        replicas=config.server_replicas,
+        fault_plan=config.fault_plan,
+        retry_policy=config.retry_policy,
+        ticket_timeout=config.ticket_timeout,
     )
     return EdgeCutBackend(service)
 

@@ -15,6 +15,7 @@ from __future__ import annotations
 import dataclasses
 from dataclasses import dataclass
 
+from repro.core.faults import FaultPlan, RetryPolicy
 from repro.core.sampling.service import (
     DEFAULT_DIRECTION,
     MAX_PARTS,
@@ -84,6 +85,24 @@ class GLISPConfig:
     # batch with more edges than the last bucket falls back to
     # power-of-two padding (extra compile) rather than failing
     infer_edge_buckets: tuple = ()
+
+    # -- fault tolerance -----------------------------------------------------
+    # chaos schedule injected into the sampling servers + storage tiers;
+    # None = no injection (and no injection overhead on the hot paths)
+    fault_plan: FaultPlan | None = None
+    # retry/backoff shared by the sampling dispatch and tier-read paths;
+    # None = the RetryPolicy defaults (3 attempts, no delay)
+    retry_policy: RetryPolicy | None = None
+    # bound on every blocking ticket.result() wait; None = wait forever
+    ticket_timeout: float | None = None
+    # sampling-server replicas per partition (replica 0 is the primary);
+    # >1 enables failover when a dispatch exhausts its retries
+    server_replicas: int = 1
+    # crash budget for the forked prefetch worker (see BatchPipeline)
+    worker_respawns: int = 1
+    # auto-checkpoint every N training steps into checkpoint_dir; 0 = off
+    checkpoint_every: int = 0
+    checkpoint_dir: str | None = None
 
     seed: int = 0
 
@@ -182,6 +201,37 @@ class GLISPConfig:
             raise ValueError(
                 f"dynamic_frac must be in (0, 1], got {self.dynamic_frac}"
             )
+        if self.fault_plan is not None and not isinstance(
+            self.fault_plan, FaultPlan
+        ):
+            raise TypeError(
+                f"fault_plan must be a FaultPlan or None, got {self.fault_plan!r}"
+            )
+        if self.retry_policy is not None:
+            if not isinstance(self.retry_policy, RetryPolicy):
+                raise TypeError(
+                    "retry_policy must be a RetryPolicy or None, got "
+                    f"{self.retry_policy!r}"
+                )
+            self.retry_policy.validate()
+        if self.ticket_timeout is not None and self.ticket_timeout <= 0:
+            raise ValueError(
+                f"ticket_timeout must be positive or None, got {self.ticket_timeout}"
+            )
+        if self.server_replicas < 1:
+            raise ValueError(
+                f"server_replicas must be >= 1, got {self.server_replicas}"
+            )
+        if self.worker_respawns < 0:
+            raise ValueError(
+                f"worker_respawns must be >= 0, got {self.worker_respawns}"
+            )
+        if self.checkpoint_every < 0:
+            raise ValueError(
+                f"checkpoint_every must be >= 0, got {self.checkpoint_every}"
+            )
+        if self.checkpoint_every > 0 and self.checkpoint_dir is None:
+            raise ValueError("checkpoint_every > 0 requires a checkpoint_dir")
         if self.infer_mode not in ("bucketed", "reference"):
             raise ValueError(
                 f"infer_mode must be 'bucketed' or 'reference', got {self.infer_mode!r}"
@@ -204,4 +254,9 @@ class GLISPConfig:
         d["infer_edge_buckets"] = list(self.infer_edge_buckets)
         d["storage_tiers"] = list(self.storage_tiers)
         d["tier_capacities"] = list(self.tier_capacities)
+        # typed fault-tolerance objects serialize via their own to_dict
+        d["fault_plan"] = self.fault_plan.to_dict() if self.fault_plan else None
+        d["retry_policy"] = (
+            self.retry_policy.to_dict() if self.retry_policy else None
+        )
         return d

@@ -87,13 +87,26 @@ class BatchPipeline:
         vertex_quantum: int = 256,
         edge_quantum: int = 1024,
         feature_source=None,  # FeatureSource; None = graph.vertex_feats
+        ticket_timeout: float | None = None,
+        worker_respawns: int = 1,
     ):
+        """``ticket_timeout`` bounds every blocking ``ticket.result()``
+        wait (None = wait forever, explicitly).  ``worker_respawns`` is the
+        crash budget for the forked prefetch worker: a worker found dead
+        mid-run is respawned up to this many times, replaying the keyed
+        seed stream past the batches already delivered — the resumed
+        stream is bit-identical by construction (see ``_respawn_worker``).
+        ``worker_respawns=0`` restores the old fail-fast behavior."""
         if workers not in ("auto", "process", "thread"):
             raise ValueError(
                 f"workers must be 'auto', 'process' or 'thread', got {workers!r}"
             )
         if inflight < 1:
             raise ValueError(f"inflight must be >= 1, got {inflight}")
+        if worker_respawns < 0:
+            raise ValueError(
+                f"worker_respawns must be >= 0, got {worker_respawns}"
+            )
         self.backend = backend
         # accept a SamplerBackend or a raw GatherApply/EdgeCut client; the
         # async submission window needs `submit` (the service surface)
@@ -140,6 +153,10 @@ class BatchPipeline:
             balance_partitions=balance_partitions,
         )
         self.sample_time = 0.0  # producer-side host time (sampling + padding)
+        self.ticket_timeout = ticket_timeout
+        self.worker_respawns = int(worker_respawns)
+        self.respawn_count = 0  # workers respawned over this pipeline's life
+        self._respawns_left = self.worker_respawns
         # request keys are pipeline-owned: (loader seed, running index), so
         # the stream is independent of the service's other consumers
         self._key_base = int(seed) & _KEY_MASK
@@ -149,6 +166,7 @@ class BatchPipeline:
         self._cmd_q = None
         self._data_q = None
         self._cancel = None  # mp.Event: stop the worker's current run early
+        self._run_history: list[int] = []  # epochs of fully produced runs
 
     # ------------------------------------------------------------------
     def _next_key(self) -> tuple:
@@ -167,9 +185,10 @@ class BatchPipeline:
         unwindowed streams are bit-identical."""
         if self._pending and np.array_equal(self._pending[0][0], seeds):
             _, ticket = self._pending.popleft()
-            return ticket.result()
+            return ticket.result(timeout=self.ticket_timeout)
         if self._submit is not None:
-            return self._submit(seeds, self.spec, key=self._next_key()).result()
+            ticket = self._submit(seeds, self.spec, key=self._next_key())
+            return ticket.result(timeout=self.ticket_timeout)
         return self._sample(
             seeds, self.fanouts, weighted=self.weighted, direction=self.direction
         )
@@ -201,10 +220,24 @@ class BatchPipeline:
             _, ticket = self._pending.popleft()
             ticket.cancel()
 
-    def _produce_np(self, epochs: int):
+    def _forward_run(self, epochs: int) -> None:
+        """Replay one completed run WITHOUT sampling: consume the seed
+        stream (advancing the loader's per-epoch permutation RNG) and burn
+        one request key per batch, leaving the producer state exactly
+        where a real run would have left it.  Used by a respawned worker
+        to fast-forward to the crashed run."""
+        for _ in self._seed_stream(epochs):
+            if self._submit is not None:
+                self._next_key()
+
+    def _produce_np(self, epochs: int, skip: int = 0):
         """The serial producer: pure numpy, safe inside the forked worker.
         With ``inflight >= 2`` and a service backend it keeps a window of
         sample requests in flight ahead of the batch being padded.
+        ``skip`` fast-forwards past the first ``skip`` batches (already
+        delivered before a worker crash) without sampling them — stream
+        positions and request keys are consumed so batch ``i`` keeps key
+        ``(seed, i)`` and the remainder is bit-identical.
 
         The bit-identity contract (any prefetch/inflight depth, shared or
         private service) applies to runs driven to completion: abandoning a
@@ -214,6 +247,11 @@ class BatchPipeline:
         producer stopped."""
         self._drop_pending()  # stale tickets from an abandoned run
         stream = self._seed_stream(epochs)
+        for _ in range(skip):
+            if next(stream, None) is None:
+                break
+            if self._submit is not None:
+                self._next_key()
         windowed = self.inflight > 1 and self._submit is not None
         queue: collections.deque = collections.deque()
         try:
@@ -272,11 +310,19 @@ class BatchPipeline:
             except OSError:
                 pass
         while True:
+            # glint: disable=PRJ004 -- SimpleQueue has no timeout kwarg; an
+            # idle worker is stopped via close(), which escalates to kill()
             cmd = self._cmd_q.get()
             if cmd[0] == "stop":
                 return
+            if cmd[0] == "forward":
+                # replay a prior completed run without sampling (respawn
+                # fast-forward); ack so the parent can sequence commands
+                self._forward_run(cmd[1])
+                self._data_q.put(("fwd",))
+                continue
             try:
-                for seeds, batch in self._produce_np(cmd[1]):
+                for seeds, batch in self._produce_np(cmd[1], skip=cmd[2]):
                     self._data_q.put(("item", seeds, batch))
                 self._data_q.put(("done", self.sample_time))
             except BaseException as exc:  # noqa: BLE001 - re-raised in parent
@@ -313,23 +359,87 @@ class BatchPipeline:
                         "in native code"
                     )
 
+    def _respawn_worker(self, code, epochs: int, delivered: int) -> None:
+        """Fork a fresh worker and fast-forward it to the crashed run.
+
+        The fresh child forks from THIS process's pristine producer state
+        (the parent never advances the loader/key state in process mode),
+        so it replays every previously completed run via cheap ``forward``
+        commands, then re-enters the crashed run skipping the ``delivered``
+        batches already yielded.  Because sampling randomness is keyed
+        ``(seed, batch_index)`` and the skip path consumes exactly the
+        stream positions and keys a real run would, the resumed stream is
+        bit-identical to an uncrashed one by construction."""
+        self._respawns_left -= 1
+        self.respawn_count += 1
+        _log.warning(
+            "prefetch worker died (exit code %s); respawning (%d left in "
+            "crash budget) and replaying %d delivered batch(es)",
+            code,
+            self._respawns_left,
+            delivered,
+        )
+        self._proc = None  # force a fresh fork (with fresh, empty queues)
+        self._ensure_worker()
+        self._cancel.clear()
+        for past_epochs in self._run_history:
+            self._cmd_q.put(("forward", past_epochs))
+            try:
+                msg = self._data_q.get(timeout=60.0)
+            except queue_mod.Empty:
+                msg = None
+            if msg is None or msg[0] != "fwd":
+                self.close()
+                raise RuntimeError(
+                    "respawned prefetch worker failed to replay run history"
+                )
+        self._cmd_q.put(("produce", epochs, delivered))
+
+    def _read_or_respawn(self, epochs: int, delivered: int):
+        """Queue read; a dead worker is respawned (crash budget permitting)
+        and told to resume past the batches already delivered."""
+        while True:
+            try:
+                return self._data_q.get(timeout=1.0)
+            except queue_mod.Empty:
+                if self._proc is not None and self._proc.is_alive():
+                    continue
+                code = self._proc.exitcode if self._proc is not None else None
+                if self._respawns_left <= 0:
+                    self.close()
+                    raise RuntimeError(
+                        f"prefetch worker died (exit code {code}) without "
+                        "reporting an error — likely killed (OOM?) or crashed "
+                        "in native code"
+                        + (
+                            f" — crash budget of {self.worker_respawns} "
+                            "respawn(s) exhausted"
+                            if self.worker_respawns
+                            else ""
+                        )
+                    )
+                self._respawn_worker(code, epochs, delivered)
+
     def _process_batches(self, epochs: int):
         self._ensure_worker()
         self._cancel.clear()
-        self._cmd_q.put(("produce", epochs))
+        self._cmd_q.put(("produce", epochs, 0))
+        delivered = 0
         finished = False
         try:
             while True:
-                msg = self._next_msg()
+                msg = self._read_or_respawn(epochs, delivered)
                 if msg[0] == "done":
                     finished = True
                     self.sample_time = msg[1]  # worker's cumulative clock
+                    self._run_history.append(epochs)
                     return
                 if msg[0] == "error":
                     finished = True
                     self.close()
                     raise RuntimeError(f"prefetch worker failed:\n{msg[1]}")
                 _, seeds, batch = msg
+                delivered += 1
                 yield seeds, jax.tree.map(jnp.asarray, batch)
         finally:
             if not finished and self._proc is not None:
@@ -338,9 +448,19 @@ class BatchPipeline:
                 # (not sampling concurrently) before the next command
                 self._cancel.set()
                 while True:
-                    msg = self._next_msg()
+                    try:
+                        msg = self._next_msg()
+                    except RuntimeError:
+                        # worker died mid-drain: the run was already being
+                        # abandoned, nothing left to recover
+                        break
                     if msg[0] == "done":
                         self.sample_time = msg[1]
+                        # an abandoned run still advanced the worker's
+                        # loader/key state; record it so a later respawn
+                        # replays it (bit-identity is only contracted for
+                        # runs driven to completion — see _produce_np)
+                        self._run_history.append(epochs)
                         break
                     if msg[0] == "error":
                         self.close()
@@ -348,19 +468,27 @@ class BatchPipeline:
                             f"prefetch worker failed:\n{msg[1]}"
                         )
 
-    def close(self) -> None:
-        """Stop the worker process (no-op for thread/serial modes)."""
+    def close(self, timeout: float = 2.0) -> None:
+        """Stop the worker process (no-op for thread/serial modes).
+
+        Bounded: a graceful ``stop`` + join escalates to ``terminate()``
+        (SIGTERM) and finally ``kill()`` (SIGKILL), so close() returns even
+        when the worker is wedged in native code or ignoring SIGTERM."""
         proc, self._proc = self._proc, None
         if proc is not None and proc.is_alive():
             try:
                 self._cmd_q.put(("stop",))
-                proc.join(timeout=2)
+                proc.join(timeout=timeout)
             except (OSError, ValueError) as exc:
                 # command queue already torn down (closed pipe / released
                 # semaphore); fall through to terminate() below
                 _log.debug("graceful worker stop failed: %s", exc)
             if proc.is_alive():
                 proc.terminate()
+                proc.join(timeout=timeout)
+            if proc.is_alive():
+                proc.kill()
+                proc.join(timeout=timeout)
 
     def __del__(self):  # best effort; daemon children die with the parent
         try:

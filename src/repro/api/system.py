@@ -168,6 +168,7 @@ class GLISPSystem:
         Pass ``key=`` to pin the request's RNG key; without it the service
         assigns a sequence key (fine for a lone blocking caller, not for
         code sharing the service with other submitters)."""
+        # timeout=None defers to the service's configured ticket_timeout
         return self.submit(
             seeds,
             spec,
@@ -176,7 +177,7 @@ class GLISPSystem:
             direction=direction,
             replace=replace,
             key=key,
-        ).result()
+        ).result(timeout=None)
 
     def partition_metrics(self) -> dict:
         if self._metrics is None:
@@ -187,6 +188,11 @@ class GLISPSystem:
 
     def server_workloads(self) -> np.ndarray:
         return self.backend.server_workloads()
+
+    def server_health(self) -> dict:
+        """Health of every sampling server replica (circuit-breaker view):
+        ``{"server.<part>.<replica>": "up" | "quarantined"}``."""
+        return self.service.server_health()
 
     def reset_stats(self) -> None:
         self.backend.reset_stats()
@@ -234,6 +240,8 @@ class GLISPSystem:
             vertex_quantum=cfg.vertex_quantum,
             edge_quantum=cfg.edge_quantum,
             feature_source=feature_source,
+            ticket_timeout=cfg.ticket_timeout,
+            worker_respawns=cfg.worker_respawns,
         )
 
     # -- training ------------------------------------------------------
@@ -273,6 +281,10 @@ class GLISPSystem:
             ),
             balance_partitions=cfg.balance_partitions,
             feature_source=feature_source,
+            checkpoint_dir=cfg.checkpoint_dir,
+            checkpoint_every=cfg.checkpoint_every,
+            ticket_timeout=cfg.ticket_timeout,
+            worker_respawns=cfg.worker_respawns,
         )
 
     def train(
@@ -410,6 +422,9 @@ class GLISPSystem:
             use_jit=resolved["jit"],
             use_kernel=resolved["use_kernel"],
             edge_buckets=resolved["edge_buckets"],
+            ticket_timeout=cfg.ticket_timeout,
+            retry_policy=cfg.retry_policy,
+            faults=cfg.fault_plan,
         )
         # pin layer_fns/feats so the id()s in the signature stay valid
         self._infer_cache = (sig, engine, (list(layer_fns), feats_arr))

@@ -209,6 +209,9 @@ class LayerwiseInferenceEngine:
         use_jit: bool = True,
         use_kernel: bool | None = None,
         edge_buckets: tuple | None = None,
+        ticket_timeout: float | None = None,
+        retry_policy=None,  # RetryPolicy for tiered-storage reads
+        faults=None,  # FaultPlan/FaultInjector armed on the cache tiers
     ):
         if mode not in ("bucketed", "reference"):
             raise ValueError(f"mode must be 'bucketed' or 'reference', got {mode!r}")
@@ -232,6 +235,9 @@ class LayerwiseInferenceEngine:
         self.use_jit = use_jit
         self.use_kernel = use_kernel
         self.edge_buckets = tuple(edge_buckets) if edge_buckets else ()
+        self.ticket_timeout = ticket_timeout
+        self.retry_policy = retry_policy
+        self.faults = faults
         self._jitted: dict = {}  # layer k -> jit'd slice (shape-keyed inside)
         self._shapes_seen: set = set()  # (layer, Bp, Ep) -> compile counter
         # lifetime views for repro.analysis.recompile_guard: actual traces
@@ -297,9 +303,14 @@ class LayerwiseInferenceEngine:
             store.dim,
             capacities=self.tier_capacities,
             dtype=store.dtype,
+            faults=self.faults,
         )
         return HybridCache(
-            store, tiers, policy=self.policy, dynamic_frac=self.dynamic_frac
+            store,
+            tiers,
+            policy=self.policy,
+            dynamic_frac=self.dynamic_frac,
+            retry_policy=self.retry_policy,
         )
 
     # ------------------------------------------------------------------
@@ -370,7 +381,7 @@ class LayerwiseInferenceEngine:
                 # (the precomputed one-hop also defines the boundary
                 # prefetch set for the static fill)
                 if tickets is not None:
-                    sub = tickets[p].result()
+                    sub = tickets[p].result(timeout=self.ticket_timeout)
                     tickets[p] = None  # release the hop data once consumed
                 else:
                     sub = self.client.sample_khop(

@@ -45,10 +45,12 @@ Two consumption surfaces share the same servers, routing, and hop executor:
 from __future__ import annotations
 
 import threading
+import time
 from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.faults import CircuitBreaker, InjectedFault, RetryPolicy, as_injector
 from repro.graph.graph import GraphPartition, HeteroGraph
 
 __all__ = [
@@ -60,6 +62,7 @@ __all__ = [
     "SamplingSpec",
     "SampleRequest",
     "SampleTicket",
+    "SampleTimeout",
     "SamplingService",
     "GatherApplyRouting",
     "OwnerRouting",
@@ -157,6 +160,12 @@ class ServerStats:
     work_units: float = 0.0  # modeled work: edges scanned + samples drawn
     edges_returned: int = 0
     bytes_out: int = 0
+    # fault-tolerance counters: extra gather attempts after an injected
+    # failure, dispatches served by a non-primary replica, and dispatches
+    # lost entirely (every replica exhausted -> degraded partial fanout)
+    retries: int = 0
+    failovers: int = 0
+    degraded: int = 0
 
     def merge(self, other: "ServerStats") -> None:
         self.requests += other.requests
@@ -164,22 +173,50 @@ class ServerStats:
         self.work_units += other.work_units
         self.edges_returned += other.edges_returned
         self.bytes_out += other.bytes_out
+        self.retries += other.retries
+        self.failovers += other.failovers
+        self.degraded += other.degraded
 
 
 class SamplingServer:
     def __init__(
-        self, part: GraphPartition, seed: int = 0, cost_model: str = "algd"
+        self,
+        part: GraphPartition,
+        seed: int = 0,
+        cost_model: str = "algd",
+        *,
+        replica_id: int = 0,
+        faults=None,
     ):
         """cost_model:
         "algd" — GLISP: Vitter's Algorithm D, O(k) work per uniform request
                  (the paper's design);
         "scan" — baseline systems whose uniform neighbor sampling walks the
                  local adjacency slice, O(local_deg) per request (DGL-style
-                 permutation/reservoir implementations)."""
+                 permutation/reservoir implementations).
+
+        ``replica_id`` distinguishes replica servers of the same partition
+        (the service's failover targets); ``faults`` is an optional
+        ``FaultInjector`` fired at the top of every gather, BEFORE any RNG
+        consumption or stats accounting, so a failed attempt leaves no
+        trace in the sample stream and a retry redraws bit-identically."""
         self.part = part
         self.rng = np.random.default_rng(seed * 7919 + part.part_id)
         self.stats = ServerStats()
         self.cost_model = cost_model
+        self.replica_id = replica_id
+        self.faults = faults
+        self.breaker = CircuitBreaker()
+        self.site = f"server.{part.part_id}.{replica_id}"
+
+    @property
+    def health(self) -> str:
+        """"up" or "quarantined" (circuit breaker open)."""
+        return "quarantined" if self.breaker.state == "open" else "up"
+
+    def _maybe_fail(self) -> None:
+        if self.faults is not None:
+            self.faults.fire(self.site)
 
     # -- helpers -----------------------------------------------------------
     def _slices(self, lids: np.ndarray, direction: str):
@@ -235,6 +272,7 @@ class SamplingServer:
         clients); the service passes a per-request stream so results are
         independent of request interleaving.  ``replace=True`` draws each of
         the r slots independently (with replacement)."""
+        self._maybe_fail()
         rng = self.rng if rng is None else rng
         p = self.part
         lids = p.global_to_local(seeds_gid)
@@ -303,6 +341,7 @@ class SamplingServer:
         *,
         rng: np.random.Generator | None = None,
     ):
+        self._maybe_fail()
         rng = self.rng if rng is None else rng
         p = self.part
         assert p.edge_weights is not None, "graph has no edge weights"
@@ -370,6 +409,13 @@ class SampledHop:
 class SampledSubgraph:
     seeds: np.ndarray
     hops: list[SampledHop] = field(default_factory=list)
+    # True when at least one dispatch was lost to failures (every replica
+    # exhausted or quarantined): the sample is a partial fanout.  Degraded
+    # results are flagged, never silent — consumers decide whether partial
+    # neighborhoods are acceptable (training often tolerates them; a
+    # determinism-sensitive consumer must drop or resample them).
+    degraded: bool = False
+    lost_dispatches: int = 0
 
     def all_vertices(self) -> np.ndarray:
         arrs = [self.seeds] + [h.src for h in self.hops] + [h.dst for h in self.hops]
@@ -457,6 +503,10 @@ class _RequestState:
         self.cancelled = False
 
 
+class SampleTimeout(TimeoutError):
+    """``SampleTicket.result(timeout=)`` deadline expired before completion."""
+
+
 class SampleTicket:
     """Future-like handle for a submitted request.  ``result()`` drives the
     service's cooperative scheduler until this request completes — every
@@ -478,10 +528,26 @@ class SampleTicket:
         consuming scheduler rounds and skewing workload counters."""
         self._service._cancel(self._state)
 
-    def result(self) -> SampledSubgraph:
+    def result(self, timeout: float | None = None) -> SampledSubgraph:
+        """Drive rounds until done; raise :class:`SampleTimeout` past the
+        deadline.  ``timeout=None`` falls back to the service's
+        ``ticket_timeout`` (itself ``None`` = wait forever, an explicit
+        opt-in).  The deadline is checked between rounds: a round's numpy
+        work is not interruptible, so expiry is detected at the next
+        round boundary — the ticket stays in flight and a later
+        ``result()`` call may still complete it."""
+        if timeout is None:
+            timeout = self._service.ticket_timeout
+        deadline = None if timeout is None else time.monotonic() + float(timeout)
         if self._state.cancelled:
             raise RuntimeError("sample request was cancelled")
         while not self._state.done:
+            if deadline is not None and time.monotonic() >= deadline:
+                raise SampleTimeout(
+                    f"sample request key={self._state.request.key} not "
+                    f"complete within {timeout}s "
+                    f"({self._service.inflight()} requests in flight)"
+                )
             self._service._advance_round()
         if self._state.cancelled:
             raise RuntimeError("sample request was cancelled")
@@ -550,6 +616,26 @@ def _chunked(arr: np.ndarray, max_batch: int) -> list[np.ndarray]:
     return [arr[i : i + max_batch] for i in range(0, n, max_batch)]
 
 
+def _gather_once(
+    srv: SamplingServer,
+    chunk: np.ndarray,
+    fanout: int,
+    direction: str,
+    *,
+    weighted: bool,
+    replace: bool,
+    rng: np.random.Generator | None,
+):
+    """One raw gather attempt against one server.  Shared by the direct
+    executor path and the service's fault-tolerant dispatcher: any server
+    hosting the same partition, given the same ``rng`` key material,
+    returns the bit-identical draw — which is what makes retry and
+    replica failover invisible in the sample stream."""
+    if weighted:
+        return srv.weighted_gather(chunk, fanout, direction, rng=rng)
+    return srv.uniform_gather(chunk, fanout, direction, rng=rng, replace=replace)
+
+
 def execute_hop(
     servers: list[SamplingServer],
     routed: list[np.ndarray],
@@ -563,6 +649,7 @@ def execute_hop(
     rng_for=None,
     max_server_batch: int = 0,
     on_dispatch=None,
+    dispatch=None,
 ):
     """One hop for one request: per-server (chunked) gathers + optional Apply.
 
@@ -576,31 +663,49 @@ def execute_hop(
 
     ``rng_for(part_id, chunk_idx)`` supplies per-dispatch RNG streams (the
     service's per-request keying); ``None`` uses each server's shared stream.
-    ``on_dispatch(part_id, chunk)`` observes every dispatched chunk (the
-    service's coalescing accountant).
+    ``dispatch(part_id, chunk_idx, chunk)`` overrides the gather itself
+    (the service's fault-tolerant retry/failover path); it returns
+    ``(serving_server, raw_gather)`` or ``None`` for a lost dispatch,
+    which marks the hop degraded.  ``on_dispatch(part_id, chunk, server)``
+    observes every SERVED chunk (the coalescing accountant) — lost
+    dispatches are not observed, so rebates never touch uncharged stats.
+
+    Returns ``(src, nbr, eid, lost)`` where ``lost`` counts dispatches
+    that produced no answer.
     """
     parts_s, parts_n, parts_x, parts_e = [], [], [], []
+    lost = 0
     for p, (srv, sub) in enumerate(zip(servers, routed)):
         for ci, chunk in enumerate(_chunked(sub, max_server_batch)):
-            rng = rng_for(p, ci) if rng_for is not None else None
+            if dispatch is not None:
+                served = dispatch(p, ci, chunk)
+                if served is None:
+                    lost += 1
+                    continue
+                srv_used, res = served
+            else:
+                rng = rng_for(p, ci) if rng_for is not None else None
+                srv_used = srv
+                res = _gather_once(
+                    srv, chunk, fanout, direction,
+                    weighted=weighted, replace=replace, rng=rng,
+                )
             if on_dispatch is not None:
-                on_dispatch(p, chunk)
+                on_dispatch(p, chunk, srv_used)
             if weighted:
-                s, n, sc, e = srv.weighted_gather(chunk, fanout, direction, rng=rng)
+                s, n, sc, e = res
                 if merge:
                     parts_x.append(sc)
                 else:
                     s, n, e = _topk_by_score(s, n, e, sc, fanout)
             else:
-                s, n, e = srv.uniform_gather(
-                    chunk, fanout, direction, rng=rng, replace=replace
-                )
+                s, n, e = res
             parts_s.append(s)
             parts_n.append(n)
             parts_e.append(e)
     if not parts_s:
         z = np.zeros(0, np.int64)
-        return z, z, z
+        return z, z, z, lost
     s = np.concatenate(parts_s)
     n = np.concatenate(parts_n)
     e = np.concatenate(parts_e)
@@ -609,7 +714,7 @@ def execute_hop(
             s, n, e = _topk_by_score(s, n, e, np.concatenate(parts_x), fanout)
         else:
             s, n, e = _trim_uniform(s, n, e, fanout, trim_rng)
-    return s, n, e
+    return s, n, e, lost
 
 
 # ---------------------------------------------------------------------------
@@ -662,12 +767,49 @@ class SamplingService:
         seed: int = 0,
         coalesce: bool = True,
         max_server_batch: int = 0,
+        replicas: int = 1,
+        fault_plan=None,
+        retry_policy: RetryPolicy | None = None,
+        ticket_timeout: float | None = None,
     ):
+        """``replicas`` spawns ``replicas - 1`` extra servers per partition
+        sharing the primary's ``GraphPartition`` (no data copy — the
+        in-process stand-in for a replicated deployment); dispatches fail
+        over to them when the primary's attempts are exhausted or its
+        breaker is open.  ``fault_plan`` (a ``FaultPlan`` or shared
+        ``FaultInjector``) arms injection at every server's gather site;
+        ``retry_policy`` bounds per-replica attempts; ``ticket_timeout``
+        is the default deadline for ``SampleTicket.result()``."""
+        if replicas < 1:
+            raise ValueError(f"replicas must be >= 1, got {replicas}")
         self.servers = servers
         self.routing = routing
         self.seed = int(seed) & _KEY_MASK
         self.coalesce = coalesce
         self.max_server_batch = int(max_server_batch)
+        self.replicas = int(replicas)
+        self.faults = as_injector(fault_plan)
+        self.retry_policy = retry_policy if retry_policy is not None else RetryPolicy()
+        self.retry_policy.validate()
+        self.ticket_timeout = ticket_timeout
+        self.degraded_dispatches = 0
+        self.groups: list[list[SamplingServer]] = []
+        for srv in servers:
+            if self.faults is not None:
+                srv.faults = self.faults
+            group = [srv]
+            for r in range(1, self.replicas):
+                group.append(
+                    SamplingServer(
+                        srv.part,
+                        seed=int(seed) + 104729 * r,
+                        cost_model=srv.cost_model,
+                        replica_id=r,
+                        faults=self.faults,
+                    )
+                )
+            self.groups.append(group)
+        self._all_servers = [s for group in self.groups for s in group]
         # eids are only meaningful when EVERY server can map to global ids
         # (partitions persisted before edge_global_id existed return local
         # slots, which must not be mistaken for global edge ids)
@@ -742,7 +884,7 @@ class SamplingService:
         )
         # glint: disable=DET004 -- deprecated shim keeps the legacy
         # sequence-key behavior its remaining external callers rely on
-        return self.submit(seeds, spec).result()
+        return self.submit(seeds, spec).result(timeout=self.ticket_timeout)
 
     # -- stats ---------------------------------------------------------
     @property
@@ -756,18 +898,31 @@ class SamplingService:
         return router
 
     def stats(self) -> ServerStats:
-        """Service-level aggregate: per-server counters merged into one."""
+        """Service-level aggregate: per-server counters (primaries and
+        replicas) merged into one, plus the service's lost-dispatch
+        count in ``degraded``."""
         merged = ServerStats()
-        for srv in self.servers:
+        for srv in self._all_servers:
             merged.merge(srv.stats)
+        merged.degraded += self.degraded_dispatches
         return merged
 
+    def server_health(self) -> dict[str, str]:
+        """Health per replica site, e.g. ``{"server.0.0": "up",
+        "server.0.1": "quarantined"}`` (circuit-breaker view)."""
+        return {srv.site: srv.health for srv in self._all_servers}
+
     def server_workloads(self) -> np.ndarray:
-        return np.array([s.stats.work_units for s in self.servers])
+        """Modeled work per partition, summed over that partition's
+        replicas (shape unchanged from the replica-free layout)."""
+        return np.array(
+            [sum(s.stats.work_units for s in group) for group in self.groups]
+        )
 
     def reset_stats(self) -> None:
-        for s in self.servers:
+        for s in self._all_servers:
             s.stats = ServerStats()
+        self.degraded_dispatches = 0
         self.parallel_work = 0.0
         self.total_work = 0.0
 
@@ -801,28 +956,69 @@ class SamplingService:
             active = list(self._inflight)
             if not active:
                 return
-            w0 = [srv.stats.work_units for srv in self.servers]
-            log: list[list[np.ndarray]] = [[] for _ in self.servers]
+            w0 = [srv.stats.work_units for srv in self._all_servers]
+            # dispatch log keyed by the SERVING server (primary or a
+            # failover replica), so coalescing rebates hit the stats that
+            # were actually charged
+            log: dict[int, tuple[SamplingServer, list]] = {}
 
-            def on_dispatch(p, chunk):
-                log[p].append(chunk)
+            def on_dispatch(p, chunk, srv):
+                log.setdefault(id(srv), (srv, []))[1].append(chunk)
 
             for st in active:
                 self._execute_hop(st, on_dispatch)
             if self.coalesce:
                 self._coalesce_credit(log)
             deltas = [
-                srv.stats.work_units - w for srv, w in zip(self.servers, w0)
+                srv.stats.work_units - w
+                for srv, w in zip(self._all_servers, w0)
             ]
             self.parallel_work += max(deltas) if deltas else 0.0
             self.total_work += sum(deltas)
             self._inflight = [st for st in self._inflight if not st.done]
 
+    def _dispatch_gather(self, p: int, ci: int, chunk: np.ndarray, key, hop, spec):
+        """Fault-tolerant dispatch of one chunk to partition ``p``.
+
+        Tries each non-quarantined replica in order, up to
+        ``retry_policy.max_attempts`` times each.  Every attempt
+        re-derives the dispatch RNG stream from ``(key, hop, p, ci)`` —
+        independent of attempt number and of which replica answers — so
+        a retry or a failover redraws the bit-identical sample: failover
+        is invisible in the result stream by construction.  Returns
+        ``(serving_server, raw_gather)`` or ``None`` when every replica
+        is exhausted (a degraded, partial-fanout dispatch)."""
+        policy = self.retry_policy
+        fanout = spec.fanouts[hop]
+        for r, srv in enumerate(self.groups[p]):
+            if not srv.breaker.allow():
+                continue
+            for attempt in range(1, policy.max_attempts + 1):
+                rng = self._rng(key, hop, p, ci, _GATHER_TAG)
+                try:
+                    res = _gather_once(
+                        srv, chunk, fanout, spec.direction,
+                        weighted=spec.weighted, replace=spec.replace, rng=rng,
+                    )
+                except InjectedFault:
+                    srv.breaker.record_failure()
+                    if attempt < policy.max_attempts and srv.breaker.state != "open":
+                        srv.stats.retries += 1
+                        policy.sleep(attempt)
+                        continue
+                    break  # replica exhausted or quarantined: fail over
+                srv.breaker.record_success()
+                if r > 0:
+                    srv.stats.failovers += 1
+                return srv, res
+        self.degraded_dispatches += 1
+        return None
+
     def _execute_hop(self, st: _RequestState, on_dispatch) -> None:
         spec = st.request.spec
         key = st.request.key
         hop = st.hop
-        s, n, e = execute_hop(
+        s, n, e, lost = execute_hop(
             self.servers,
             self.routing.route(st.frontier),
             spec.fanouts[hop],
@@ -834,7 +1030,13 @@ class SamplingService:
             rng_for=lambda p, ci: self._rng(key, hop, p, ci, _GATHER_TAG),
             max_server_batch=self.max_server_batch,
             on_dispatch=on_dispatch,
+            dispatch=lambda p, ci, chunk: self._dispatch_gather(
+                p, ci, chunk, key, hop, spec
+            ),
         )
+        if lost:
+            st.result.degraded = True
+            st.result.lost_dispatches += lost
         st.result.hops.append(
             SampledHop(src=s, dst=n, eid=e if self.has_global_eids else None)
         )
@@ -843,7 +1045,7 @@ class SamplingService:
         if st.hop >= len(spec.fanouts) or st.frontier.shape[0] == 0:
             st.done = True
 
-    def _coalesce_credit(self, log: list[list[np.ndarray]]) -> None:
+    def _coalesce_credit(self, log: dict) -> None:
         """Rebate the duplicated dispatch overhead within one round.
 
         Draw work stays per-request (per-request RNG streams must actually
@@ -853,7 +1055,7 @@ class SamplingService:
         batch only.  Results are untouched — coalescing on/off is
         bit-equivalent; only the workload model changes."""
         m = self.max_server_batch
-        for srv, arrs in zip(self.servers, log):
+        for srv, arrs in log.values():
             if len(arrs) <= 1:
                 continue
             # only seeds the server actually hosts were charged
@@ -906,7 +1108,7 @@ class _BlockingClient:
         frontier = seeds
         for f in fanouts:
             w0 = [srv.stats.work_units for srv in self.servers]
-            s, n, e = execute_hop(
+            s, n, e, _ = execute_hop(
                 self.servers,
                 self.routing.route(frontier),
                 f,

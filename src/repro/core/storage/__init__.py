@@ -12,7 +12,15 @@ input features (training):
 The historic ``ChunkedEmbeddingStore`` / ``TwoLevelCache`` names remain as
 deprecation shims in ``repro.core.inference`` over this package.
 """
-from repro.core.storage.store import DFSTier, IOCost, StoreStats, chunk_runs
+from repro.core.storage.store import (
+    ChunkCorruptionError,
+    ChunkReadError,
+    DFSTier,
+    IOCost,
+    StoreStats,
+    block_checksum,
+    chunk_runs,
+)
 from repro.core.storage.tiers import (
     STORAGE_TIERS,
     DiskTier,
@@ -39,6 +47,8 @@ from repro.core.storage.features import (
 __all__ = [
     "ArrayFeatureSource",
     "CACHE_POLICIES",
+    "ChunkCorruptionError",
+    "ChunkReadError",
     "DFSTier",
     "DiskTier",
     "EvictionPolicy",
@@ -57,6 +67,7 @@ __all__ = [
     "StoreStats",
     "TierStats",
     "as_feature_source",
+    "block_checksum",
     "build_tiers",
     "chunk_runs",
     "resolve_policy",

@@ -24,8 +24,9 @@ from dataclasses import dataclass, field
 
 import numpy as np
 
+from repro.core.faults import InjectedFault, RetryPolicy, as_injector
 from repro.core.storage.policies import EvictionPolicy, resolve_policy
-from repro.core.storage.store import DFSTier, IOCost, chunk_runs
+from repro.core.storage.store import ChunkReadError, DFSTier, IOCost, chunk_runs
 from repro.core.storage.tiers import STORAGE_TIERS, StorageTier, TierStats
 
 __all__ = ["FillPlan", "HybridCache", "HybridStats", "build_tiers"]
@@ -60,7 +61,20 @@ class HybridStats:
     demand_reads: int = 0  # the subset of fill_chunks served on-demand
     # (a full cache miss, not a planned fill); NOT counted as tier hits
     rows_served: int = 0
+    store_retries: int = 0  # authoritative-store reads retried
     tiers: list = field(default_factory=list)  # TierStats refs, fast→slow
+
+    # -- fault-tolerance rollups ---------------------------------------------
+    @property
+    def retries(self) -> int:
+        """All retried chunk reads, cache tiers + authoritative store."""
+        return sum(t.retries for t in self.tiers) + self.store_retries
+
+    @property
+    def failovers(self) -> int:
+        """Chunks a cache tier failed to serve (fell through to a slower
+        tier or the authoritative store)."""
+        return sum(t.failovers for t in self.tiers)
 
     # -- legacy two-level views ---------------------------------------------
     @property
@@ -115,12 +129,16 @@ class HybridStats:
             "fill_chunks": self.fill_chunks,
             "demand_reads": self.demand_reads,
             "rows_served": self.rows_served,
+            "retries": self.retries,
+            "failovers": self.failovers,
             "tiers": [
                 {
                     "kind": t.kind,
                     "hits": t.hits,
                     "admits": t.admits,
                     "evictions": t.evictions,
+                    "retries": t.retries,
+                    "failovers": t.failovers,
                 }
                 for t in self.tiers
             ],
@@ -135,17 +153,23 @@ def build_tiers(
     capacities=(),
     dtype=np.float32,
     disk_path: str | None = None,
+    faults=None,
 ) -> list[StorageTier]:
     """Materialize a fast→slow cache tier stack from registry names.
 
     ``capacities`` aligns with ``names``; missing or ``0`` entries mean
     "auto" (memory: sized from ``dynamic_frac`` by the cache; disk:
-    unbounded).  ``disk_path`` makes disk tiers actually spill to files."""
+    unbounded).  ``disk_path`` makes disk tiers actually spill to files.
+    ``faults`` (a ``FaultPlan`` or shared ``FaultInjector``) arms the
+    per-tier ``<kind>.read`` / ``<kind>.corrupt`` injection sites."""
+    injector = as_injector(faults)
     tiers: list[StorageTier] = []
     for i, name in enumerate(names):
         cls = STORAGE_TIERS.get(name)
         cap = int(capacities[i]) if i < len(capacities) else 0
         kw = {"capacity": None if cap == 0 else cap, "dtype": dtype}
+        if injector is not None:
+            kw["faults"] = injector
         if getattr(cls, "kind", None) == "disk" and disk_path is not None:
             kw["path"] = f"{disk_path}/tier{i}"
         tiers.append(cls(chunk_rows, dim, **kw))
@@ -162,7 +186,13 @@ class HybridCache:
         *,
         policy="fifo",
         dynamic_frac: float = 0.10,
+        retry_policy: RetryPolicy | None = None,
     ):
+        """``retry_policy`` bounds per-read attempts against each level;
+        a chunk a cache tier cannot serve after retries is dropped from
+        that tier and transparently falls through to the next slower
+        level (ultimately the authoritative store), recorded in that
+        tier's ``TierStats.failovers``."""
         if tiers is None:
             tiers = build_tiers(("memory", "disk"), store.chunk_rows, store.dim,
                                 dtype=store.dtype)
@@ -186,6 +216,8 @@ class HybridCache:
         self.policies: list[EvictionPolicy] = [
             resolve_policy(policy) for _ in self.tiers
         ]
+        self.retry_policy = retry_policy if retry_policy is not None else RetryPolicy()
+        self.retry_policy.validate()
         self.stats = HybridStats(tiers=[t.stats for t in self.tiers])
         self._seen_chunks: set[int] = set()  # distinct chunks ever admitted
 
@@ -248,7 +280,7 @@ class HybridCache:
             pol.set_focus(plan.focus_lo, plan.focus_hi)
         base = len(self.tiers) - 1
         for c in plan.fetch:
-            block = self.store.read_chunk(int(c))
+            block = self._store_read(int(c))
             self.stats.fill_chunks += 1
             self._admit(base, int(c), block)
 
@@ -287,19 +319,56 @@ class HybridCache:
                 t.delete_chunk(v)
                 t.stats.evictions += 1
 
+    def _tier_read(self, i: int, c: int) -> np.ndarray | None:
+        """Read chunk ``c`` from tier ``i`` with bounded retries; ``None``
+        when the tier cannot serve it (transient errors exhausted the
+        retry budget, or the stored payload is corrupt/truncated)."""
+        t = self.tiers[i]
+        policy = self.retry_policy
+        for attempt in range(1, policy.max_attempts + 1):
+            try:
+                return t.read_chunk(c)
+            except (InjectedFault, ChunkReadError, OSError):
+                if attempt < policy.max_attempts:
+                    t.stats.retries += 1
+                    policy.sleep(attempt)
+        return None
+
+    def _store_read(self, c: int) -> np.ndarray:
+        """Authoritative-store read with bounded retries.  There is no
+        slower level to fall through to: exhausting the budget propagates
+        the store's descriptive error."""
+        policy = self.retry_policy
+        for attempt in range(1, policy.max_attempts):
+            try:
+                return self.store.read_chunk(c)
+            except (InjectedFault, ChunkReadError, OSError):
+                self.stats.store_retries += 1
+                policy.sleep(attempt)
+        return self.store.read_chunk(c)
+
     def _get_chunk(self, c: int) -> np.ndarray:
         for i, t in enumerate(self.tiers):
-            if c in t:
-                t.stats.hits += 1
-                self.policies[i].on_access(c)
-                block = t.read_chunk(c)
-                for j in range(i - 1, -1, -1):  # promote into faster tiers
-                    self._admit(j, c, block)
-                return block
+            if c not in t:
+                continue
+            block = self._tier_read(i, c)
+            if block is None:
+                # the tier cannot serve this chunk: drop the bad copy and
+                # fall through to the next slower level — the read still
+                # succeeds, it just costs a slower fetch
+                t.delete_chunk(c)
+                self.policies[i].forget(c)
+                t.stats.failovers += 1
+                continue
+            t.stats.hits += 1
+            self.policies[i].on_access(c)
+            for j in range(i - 1, -1, -1):  # promote into faster tiers
+                self._admit(j, c, block)
+            return block
         # full miss: demand DFS fetch, admitted at the slowest cache tier
         # (the historic fill-free fallback, capacity included); counted as
         # demand_reads, never as a tier hit — the chunk wasn't resident
-        block = self.store.read_chunk(c)
+        block = self._store_read(c)
         self.stats.fill_chunks += 1
         self.stats.demand_reads += 1
         base = len(self.tiers) - 1

@@ -18,13 +18,59 @@ name ``ChunkedEmbeddingStore`` survives as a deprecation shim in
 from __future__ import annotations
 
 import os
+import zlib
 from dataclasses import dataclass, field
 
 import numpy as np
 
 from repro.utils import ceil_div
 
-__all__ = ["DFSTier", "IOCost", "StoreStats", "chunk_runs"]
+try:  # xxhash is faster when available; the container may not ship it
+    import xxhash  # type: ignore[import-not-found]
+except ModuleNotFoundError:  # pragma: no cover - depends on environment
+    xxhash = None
+
+__all__ = [
+    "ChunkCorruptionError",
+    "ChunkReadError",
+    "DFSTier",
+    "IOCost",
+    "StoreStats",
+    "block_checksum",
+    "chunk_runs",
+]
+
+
+class ChunkReadError(IOError):
+    """A chunk could not be read: file missing, truncated, or unparseable.
+
+    Always names the chunk id and file path so a failed tier read is
+    actionable from the message alone."""
+
+
+class ChunkCorruptionError(ChunkReadError):
+    """A chunk was read but failed checksum verification."""
+
+
+def block_checksum(block: np.ndarray) -> int:
+    """Content checksum of one chunk block (xxhash64 when available,
+    else crc32).  Computed over the raw bytes of the C-contiguous array,
+    so any bit flip in the stored payload is detected."""
+    data = np.ascontiguousarray(block)
+    if xxhash is not None:
+        return xxhash.xxh64(data.tobytes()).intdigest()
+    return zlib.crc32(data.tobytes())
+
+
+def _corrupt_block(block: np.ndarray) -> np.ndarray:
+    """Bit-flipped copy of a block — the injected-corruption payload.
+    The shape/dtype are preserved so only checksum verification (not an
+    earlier shape check) can catch it, which is the property under test."""
+    bad = np.array(block, copy=True)
+    flat = bad.view(np.uint8).reshape(-1)
+    if flat.shape[0]:
+        flat[0] ^= 0xFF
+    return bad
 
 
 def chunk_runs(rows: np.ndarray, chunk_rows: int, *, assume_sorted: bool = False):
@@ -100,7 +146,12 @@ class DFSTier:
         chunk_rows: int = 32768,
         compress: bool = False,
         dtype=np.float32,
+        *,
+        faults=None,
     ):
+        """``faults`` is an optional ``FaultInjector``; reads then fire the
+        ``dfs.read`` site (transient read error) and the ``dfs.corrupt``
+        site (bit-flipped payload, caught by checksum verification)."""
         self.path = path
         self.num_rows = num_rows
         self.dim = dim
@@ -109,6 +160,11 @@ class DFSTier:
         self.dtype = dtype
         self.num_chunks = ceil_div(num_rows, chunk_rows)
         self.stats = StoreStats()
+        self.faults = faults
+        # checksum per chunk, recorded at write and verified at read —
+        # in-memory because this process is the only writer (the DFS
+        # stand-in); a real deployment would persist them beside the chunk
+        self._sums: dict[int, int] = {}
         os.makedirs(path, exist_ok=True)
 
     # -- chunk addressing ----------------------------------------------------
@@ -153,11 +209,28 @@ class DFSTier:
         self._write_chunk_raw(c, np.ascontiguousarray(block, dtype=self.dtype))
 
     def _write_chunk_raw(self, c: int, block: np.ndarray) -> None:
+        """Atomic chunk write: tmp in the same directory + fsync +
+        ``os.replace``, so a crash mid-write leaves either the old chunk
+        or the new one, never a truncated file; the tmp is removed on
+        failure so partial writes leave no debris."""
         fn = self._chunk_file(c)
-        if self.compress:
-            np.savez_compressed(fn[:-4], block=block)
-        else:
-            np.save(fn, block)
+        tmp = fn + ".tmp"
+        try:
+            with open(tmp, "wb") as fh:
+                if self.compress:
+                    np.savez_compressed(fh, block=block)
+                else:
+                    np.save(fh, block)
+                fh.flush()
+                os.fsync(fh.fileno())
+            os.replace(tmp, fn)
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+        self._sums[c] = block_checksum(block)
         self.stats.chunk_writes += 1
 
     def _read_chunk_raw(self, c: int, allow_missing: bool = False) -> np.ndarray:
@@ -166,15 +239,36 @@ class DFSTier:
         if not os.path.exists(fn):
             if allow_missing:
                 return np.zeros((nrows, self.dim), dtype=self.dtype)
-            raise FileNotFoundError(fn)
-        if self.compress:
-            with np.load(fn) as z:
-                return z["block"]
-        return np.load(fn)
+            raise ChunkReadError(
+                f"chunk {c} of {type(self).__name__} missing: no file at {fn}"
+            )
+        try:
+            if self.compress:
+                with np.load(fn) as z:
+                    return z["block"]
+            return np.load(fn)
+        except (ValueError, EOFError, KeyError, OSError) as exc:
+            raise ChunkReadError(
+                f"chunk {c} of {type(self).__name__} unreadable "
+                f"(truncated or corrupt file): {fn}: {exc}"
+            ) from exc
+
+    def _verify(self, c: int, block: np.ndarray) -> None:
+        want = self._sums.get(c)
+        if want is not None and block_checksum(block) != want:
+            raise ChunkCorruptionError(
+                f"chunk {c} of {type(self).__name__} failed checksum "
+                f"verification: {self._chunk_file(c)}"
+            )
 
     def read_chunk(self, c: int) -> np.ndarray:
         """Counted read — a 'remote DFS fetch' in the cost model."""
+        if self.faults is not None:
+            self.faults.fire("dfs.read")
         block = self._read_chunk_raw(c)
+        if self.faults is not None and self.faults.should_fail("dfs.corrupt"):
+            block = _corrupt_block(block)
+        self._verify(c, block)
         self.stats.chunk_reads += 1
         self.stats.rows_read += block.shape[0]
         return block

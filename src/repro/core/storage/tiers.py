@@ -24,7 +24,12 @@ from typing import Protocol, runtime_checkable
 
 import numpy as np
 
-from repro.core.storage.store import chunk_runs
+from repro.core.storage.store import (
+    ChunkReadError,
+    _corrupt_block,
+    block_checksum,
+    chunk_runs,
+)
 from repro.utils import Registry
 
 __all__ = [
@@ -44,6 +49,9 @@ class TierStats:
     hits: int = 0  # chunk reads served by this tier
     admits: int = 0  # chunks written into this tier
     evictions: int = 0  # chunks dropped to stay within capacity
+    retries: int = 0  # chunk reads that succeeded only after retry
+    failovers: int = 0  # chunks this tier failed to serve (fell through
+    # to a slower tier / the authoritative store)
 
 
 @runtime_checkable
@@ -91,12 +99,27 @@ class _ChunkTierBase:
         *,
         capacity: int | None = None,
         dtype=np.float32,
+        faults=None,
     ):
         self.chunk_rows = chunk_rows
         self.dim = dim
         self.capacity = capacity
         self.dtype = dtype
         self.stats = TierStats(kind=self.kind)
+        # optional FaultInjector: reads fire "<kind>.read" (transient
+        # error) and "<kind>.corrupt" (bit-flipped payload) sites
+        self.faults = faults
+
+    def _fire_read(self) -> None:
+        if self.faults is not None:
+            self.faults.fire(f"{self.kind}.read")
+
+    def _maybe_corrupt(self, block: np.ndarray) -> np.ndarray:
+        if self.faults is not None and self.faults.should_fail(
+            f"{self.kind}.corrupt"
+        ):
+            return _corrupt_block(block)
+        return block
 
     # chunk-level interface subclasses fill in -----------------------------
     def read_chunk(self, c: int) -> np.ndarray:
@@ -166,6 +189,7 @@ class MemoryTier(_ChunkTierBase):
         self._blocks: dict[int, np.ndarray] = {}
 
     def read_chunk(self, c: int) -> np.ndarray:
+        self._fire_read()
         return self._blocks[c]
 
     def write_chunk(self, c: int, block: np.ndarray) -> None:
@@ -201,6 +225,10 @@ class DiskTier(_ChunkTierBase):
         self.path = path
         self._blocks: dict[int, np.ndarray] = {}  # path=None backing
         self._held: set[int] = set()  # path!=None backing
+        # checksums guard the real-file backing only: RAM-backed blocks
+        # are shared by reference across tiers (and legitimately mutated
+        # through write_rows), so hashing them would false-positive
+        self._sums: dict[int, int] = {}
         if path is not None:
             os.makedirs(path, exist_ok=True)
 
@@ -208,15 +236,48 @@ class DiskTier(_ChunkTierBase):
         return os.path.join(self.path, f"tier_{c:06d}.npy")
 
     def read_chunk(self, c: int) -> np.ndarray:
+        self._fire_read()
         if self.path is None:
             return self._blocks[c]
-        return np.load(self._chunk_file(c))
+        fn = self._chunk_file(c)
+        if not os.path.exists(fn):
+            raise ChunkReadError(
+                f"chunk {c} of DiskTier missing: no file at {fn}"
+            )
+        try:
+            block = np.load(fn)
+        except (ValueError, EOFError, OSError) as exc:
+            raise ChunkReadError(
+                f"chunk {c} of DiskTier unreadable "
+                f"(truncated or corrupt file): {fn}: {exc}"
+            ) from exc
+        block = self._maybe_corrupt(block)
+        want = self._sums.get(c)
+        if want is not None and block_checksum(block) != want:
+            raise ChunkReadError(
+                f"chunk {c} of DiskTier failed checksum verification: {fn}"
+            )
+        return block
 
     def write_chunk(self, c: int, block: np.ndarray) -> None:
         if self.path is None:
             self._blocks[c] = block
             return
-        np.save(self._chunk_file(c), block)
+        # tmp + replace: a failed write never leaves a partial .npy behind
+        # (and never clobbers a previously good chunk file)
+        fn = self._chunk_file(c)
+        tmp = fn + ".tmp"
+        try:
+            with open(tmp, "wb") as fh:
+                np.save(fh, block)
+            os.replace(tmp, fn)
+        except BaseException:
+            try:
+                os.remove(tmp)
+            except OSError:
+                pass
+            raise
+        self._sums[c] = block_checksum(block)
         self._held.add(c)
 
     def delete_chunk(self, c: int) -> None:
@@ -225,6 +286,7 @@ class DiskTier(_ChunkTierBase):
             return
         if c in self._held:
             self._held.discard(c)
+            self._sums.pop(c, None)
             try:
                 os.remove(self._chunk_file(c))
             except OSError:

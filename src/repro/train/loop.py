@@ -4,11 +4,16 @@
 (``repro.api.pipeline.BatchPipeline``) feeds padded minibatches into a jit'd
 AdamW step (the Fig. 11 workload).  With ``prefetch >= 1`` host-side
 sampling runs on a background thread and overlaps the device step.
+``checkpoint_every > 0`` auto-saves an atomic checkpoint every N steps;
+``resume()`` restores it and ``train()`` fast-forwards the (deterministic,
+keyed) batch stream to the saved step, so a crashed-and-resumed run ends
+with bit-identical weights to an uninterrupted one.
 ``LMTrainer`` — causal-LM training for the assigned architecture pool
 (synthetic token stream), used by smoke tests and the quickstart.
 """
 from __future__ import annotations
 
+import os
 import time
 from dataclasses import dataclass, field
 
@@ -23,7 +28,7 @@ from repro.data.tokens import SyntheticTokenStream
 from repro.models.gnn.models import GNNModel
 from repro.models.transformer.config import ArchConfig
 from repro.models.transformer.model import forward, init_params, lm_loss
-from repro.train.checkpoint import save_checkpoint
+from repro.train.checkpoint import load_checkpoint, save_checkpoint
 from repro.train.optim import AdamWConfig, adamw_init, adamw_update
 
 __all__ = ["GNNTrainer", "LMTrainer"]
@@ -59,10 +64,19 @@ class GNNTrainer:
         partition_of: np.ndarray | None = None,
         balance_partitions: bool = False,
         feature_source=None,  # FeatureSource; None = g.vertex_feats
+        checkpoint_dir: str | None = None,
+        checkpoint_every: int = 0,  # steps between auto-checkpoints; 0 = off
+        ticket_timeout: float | None = None,
+        worker_respawns: int = 1,
     ):
         self.model = model
         self.client = client
         self.g = g
+        self.checkpoint_dir = checkpoint_dir
+        self.checkpoint_every = int(checkpoint_every)
+        if self.checkpoint_every > 0 and checkpoint_dir is None:
+            raise ValueError("checkpoint_every > 0 requires a checkpoint_dir")
+        self._resume_step = 0
         self.pipeline = BatchPipeline(
             client,
             g,
@@ -80,6 +94,8 @@ class GNNTrainer:
             partition_of=partition_of,
             balance_partitions=balance_partitions,
             feature_source=feature_source,
+            ticket_timeout=ticket_timeout,
+            worker_respawns=worker_respawns,
         )
         self.fanouts = self.pipeline.fanouts
         self.direction = self.pipeline.direction
@@ -107,6 +123,37 @@ class GNNTrainer:
     def make_batch(self, seeds):
         return self.pipeline.make_batch(seeds)
 
+    # -- checkpoint / resume -------------------------------------------------
+    @property
+    def checkpoint_path(self) -> str:
+        if self.checkpoint_dir is None:
+            raise ValueError("trainer has no checkpoint_dir")
+        return os.path.join(self.checkpoint_dir, "gnn_checkpoint.npz")
+
+    def save(self, path: str | None = None, step: int = 0) -> str:
+        """Atomic checkpoint of params + optimizer state (+ step)."""
+        return save_checkpoint(
+            path or self.checkpoint_path,
+            {"params": self.params, "opt": self.opt_state},
+            step,
+        )
+
+    def resume(self, path: str | None = None) -> int:
+        """Restore the latest checkpoint; returns the restored step count.
+
+        The next ``train()`` call fast-forwards its (deterministic, keyed)
+        batch stream past the restored steps, so resuming reproduces the
+        uninterrupted run bit-for-bit: the skipped batches are never
+        recomputed, only their stream positions are consumed."""
+        tree, step = load_checkpoint(
+            path or self.checkpoint_path,
+            {"params": self.params, "opt": self.opt_state},
+        )
+        self.params = tree["params"]
+        self.opt_state = tree["opt"]
+        self._resume_step = int(step or 0)
+        return self._resume_step
+
     def train(
         self,
         epochs: int = 1,
@@ -114,9 +161,15 @@ class GNNTrainer:
         max_steps: int | None = None,
     ):
         step = 0
+        skip = self._resume_step  # batches already trained before resume()
         for seeds, batch in self.pipeline.batches(epochs):
             if max_steps is not None and step >= max_steps:
                 break
+            if step < skip:
+                # replay: consume the stream position without recomputing
+                # (the batch itself is identical by keyed construction)
+                step += 1
+                continue
             t1 = time.perf_counter()
             self.params, self.opt_state, loss = self._step(
                 self.params, self.opt_state, batch
@@ -128,6 +181,9 @@ class GNNTrainer:
                 self.log.steps.append(step)
                 self.log.losses.append(loss)
             step += 1
+            if self.checkpoint_every and step % self.checkpoint_every == 0:
+                self.save(step=step)
+        self._resume_step = 0
         # producer-side host clock: equals the old serial sample_time when
         # prefetch=0; with prefetch it is the OVERLAPPED sampling time
         self.log.sample_time = self.pipeline.sample_time

@@ -169,7 +169,18 @@ def prefetch_iterator(it, depth: int):
     t.start()
     try:
         while True:
-            item = q.get()
+            try:
+                item = q.get(timeout=1.0)
+            except queue.Empty:
+                # a produced-then-died thread always enqueues _END/_ERR
+                # first, so an empty queue + dead producer means it was
+                # killed without reporting (the process-mode analogue
+                # raises the same way in BatchPipeline._next_msg)
+                if not t.is_alive():
+                    raise RuntimeError(
+                        "prefetch producer thread died without reporting"
+                    )
+                continue
             if item is _END:
                 break
             if isinstance(item, tuple) and len(item) == 2 and item[0] is _ERR:

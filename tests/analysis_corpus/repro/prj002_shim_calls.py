@@ -15,4 +15,4 @@ def bad(backend, seeds, g):
 def good(backend, seeds, spec, key, PARTITIONERS):
     ep = PARTITIONERS.get("adadne").partition(seeds, 4, seed=0)
     ticket = backend.submit(seeds, spec, key=key)
-    return ep, ticket.result()
+    return ep, ticket.result(timeout=None)

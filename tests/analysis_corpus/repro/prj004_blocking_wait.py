@@ -1,0 +1,18 @@
+"""PRJ004: unbounded blocking waits in library code (this file sits under
+a repro/ directory, so it counts as library code)."""
+
+
+def bad(ticket, work_q, self):
+    sub = ticket.result()  # expect[PRJ004]
+    item = work_q.get()  # expect[PRJ004]
+    cmd = self._cmd_q.get()  # expect[PRJ004]
+    return sub, item, cmd
+
+
+def good(ticket, work_q, config, mapping):
+    sub = ticket.result(timeout=5.0)
+    deferred = ticket.result(timeout=None)  # deliberate: configured deadline
+    item = work_q.get(timeout=1.0)
+    value = mapping.get("key")  # dict.get: not a queue receiver
+    fallback = config.get("prefetch", 2)
+    return sub, deferred, item, value, fallback
