@@ -1,0 +1,189 @@
+"""Online-serving benchmark: Zipf traffic against ``GLISPSystem.server()``.
+
+A closed-loop harness drives the serving tier at several offered loads
+(concurrent in-flight requests).  Request popularity is Zipf-distributed
+over the vertex set — the paper's power-law assumption as live traffic —
+so the serving cache's fast tiers absorb the hot head.  Per load we
+report throughput, P50/P99 latency (the online P² estimator, cross-checked
+against exact percentiles), batch occupancy (real rows vs padded bucket
+rows), and the per-tier cache hit ratios.
+
+End-of-run asserts, per ISSUE 8:
+
+- batch occupancy at the highest load beats the single-request baseline
+  (continuous batching actually fills the padded buckets);
+- responses at every load are bit-identical per request to the load-1
+  run (batching never changes results);
+- a repeat of the highest load after warmup triggers ZERO jit retraces
+  (``recompile_guard``): serving rides the engine's existing buckets.
+
+Results land in ``BENCH_serving.json`` (``--out``); ``--smoke`` shrinks
+the workload for CI.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import tempfile
+import time
+
+import numpy as np
+
+from benchmarks.common import dataset, emit, glisp_system
+
+RESULTS: dict = {}
+
+FANOUTS = (10, 5)
+ZIPF_A = 1.3  # popularity skew exponent
+MAX_REQ_VERTS = 8
+
+
+def _emit(name: str, value: float) -> None:
+    RESULTS[name] = float(value)
+    emit(name, value)
+
+
+def _flag(name: str, ok: bool) -> None:
+    RESULTS[name] = bool(ok)
+    emit(name, 1.0 if ok else 0.0)
+
+
+def _zipf_requests(g, num_requests: int, seed: int = 0) -> list[np.ndarray]:
+    """Deterministic Zipf-popularity request stream: rank r is vertex
+    ``perm[r]`` with weight ``(r+1)^-a``, so a few hot vertices dominate."""
+    rng = np.random.default_rng(seed)
+    n = g.num_vertices
+    w = (np.arange(1, n + 1, dtype=np.float64)) ** -ZIPF_A
+    p = w / w.sum()
+    perm = rng.permutation(n)
+    sizes = rng.integers(1, MAX_REQ_VERTS + 1, size=num_requests)
+    return [
+        perm[np.unique(rng.choice(n, size=s, p=p))] for s in sizes
+    ]
+
+
+def _serve_closed_loop(server, requests: list[np.ndarray], window: int):
+    """Closed loop at a fixed offered load: keep ``window`` requests in
+    flight, flush whenever the window is full (the engine would otherwise
+    idle).  Returns (responses by request id, wall seconds)."""
+    responses: list = [None] * len(requests)
+    inflight: list[int] = []
+    nxt = 0
+    t0 = time.perf_counter()
+    while nxt < len(requests) or inflight:
+        while nxt < len(requests) and len(inflight) < window:
+            inflight.append(server.submit(requests[nxt]))
+            nxt += 1
+        server.step(force=True)
+        for rid in list(inflight):
+            resp = server.response(rid)
+            if resp is not None:
+                responses[rid] = resp
+                inflight.remove(rid)
+    return responses, time.perf_counter() - t0
+
+
+def _build_served_system(g, parts: int, feat_dim: int):
+    import jax
+
+    from repro.models.gnn import GNNModel
+
+    system = glisp_system(g, parts, fanouts=FANOUTS)
+    model = GNNModel("sage", feat_dim, hidden=16, num_layers=2)
+    params = model.init(jax.random.PRNGKey(0))
+    fns = [model.embed_layer_fn(params, k) for k in range(2)]
+    wd = tempfile.mkdtemp(prefix="bench_serving_")
+    system.infer_layerwise(fns, wd, out_dims=[16, 16], chunk_rows=512)
+    return system
+
+
+def bench_loads(system, requests: list[np.ndarray], loads: list[int]):
+    baseline = None  # load-1 responses, the bit-identity reference
+    for window in loads:
+        server = system.server(
+            queue_depth=max(window, 1), max_batch_delay_ms=0.0, deadline_ms=None
+        )
+        responses, wall = _serve_closed_loop(server, requests, window)
+        assert all(r is not None and r.status == "ok" for r in responses)
+        lat = np.array([r.latency_ms for r in responses])
+        st = server.stats
+        tag = f"load{window}"
+        _emit(f"{tag}/throughput_rps", len(requests) / wall)
+        _emit(f"{tag}/p50_ms", st.latency.p50)
+        _emit(f"{tag}/p99_ms", st.latency.p99)
+        _emit(f"{tag}/p50_exact_ms", float(np.percentile(lat, 50)))
+        _emit(f"{tag}/p99_exact_ms", float(np.percentile(lat, 99)))
+        _emit(f"{tag}/occupancy", st.occupancy())
+        _emit(f"{tag}/edge_occupancy", st.edge_occupancy())
+        _emit(f"{tag}/mean_batch_requests", st.mean_batch_requests())
+        _emit(f"{tag}/batches", st.batches)
+        for tier, ratio in st.cache_hit_ratios.items():
+            _emit(f"{tag}/cache_hit/{tier}", ratio)
+        # the online P2 estimator must track the exact percentile
+        exact = float(np.percentile(lat, 50))
+        _flag(
+            f"{tag}/p50_estimator_sane",
+            abs(st.latency.p50 - exact) <= max(1.0, 2.0 * exact),
+        )
+        assert st.timed_out == 0 and st.rejected == 0
+        if baseline is None:
+            baseline = responses
+        else:
+            identical = all(
+                np.array_equal(a.embeddings, b.embeddings)
+                for a, b in zip(baseline, responses)
+            )
+            _flag(f"{tag}/bit_identical_vs_solo", identical)
+    return baseline
+
+
+def bench_recompile(system, requests: list[np.ndarray], window: int) -> None:
+    """Repeat the highest load on the warmed engine: zero new retraces."""
+    from repro.analysis import recompile_guard
+
+    with recompile_guard(system) as rec:
+        server = system.server(
+            queue_depth=window, max_batch_delay_ms=0.0, deadline_ms=None
+        )
+        _serve_closed_loop(server, requests, window)
+    _emit("warm/jit_retraces", rec.compiles)
+    _emit("warm/new_shapes", rec.new_shapes)
+    _flag("warm/zero_retraces", rec.compiles == 0)
+
+
+def run(smoke: bool = False, out_json: str | None = "BENCH_serving.json"):
+    scale = 0.02 if smoke else 0.10
+    feat_dim = 8
+    num_requests = 48 if smoke else 256
+    loads = [1, 4, 16] if smoke else [1, 8, 32]
+    g = dataset("wikikg90m", scale=scale, feat_dim=feat_dim)
+    system = _build_served_system(g, 4, feat_dim)
+    requests = _zipf_requests(g, num_requests, seed=0)
+
+    bench_loads(system, requests, loads)
+    bench_recompile(system, requests, loads[-1])
+
+    if out_json:
+        with open(out_json, "w") as fh:
+            json.dump(RESULTS, fh, indent=2, sort_keys=True)
+        print(f"wrote {out_json}")
+    top = f"load{loads[-1]}"
+    assert RESULTS[f"{top}/bit_identical_vs_solo"], (
+        "batched responses diverged from the solo baseline"
+    )
+    assert RESULTS[f"{top}/occupancy"] > RESULTS["load1/occupancy"], (
+        "batching did not improve bucket occupancy over single-request "
+        f"serving: {RESULTS[f'{top}/occupancy']:.3f} vs "
+        f"{RESULTS['load1/occupancy']:.3f}"
+    )
+    assert RESULTS["warm/zero_retraces"], (
+        f"warm serving retraced {RESULTS['warm/jit_retraces']:.0f} slices"
+    )
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--smoke", action="store_true", help="tiny CI workload")
+    ap.add_argument("--out", default="BENCH_serving.json")
+    args = ap.parse_args()
+    run(smoke=args.smoke, out_json=args.out)

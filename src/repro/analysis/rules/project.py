@@ -17,6 +17,7 @@ __all__ = [
     "DeprecatedShimCall",
     "ConfigRegistryDrift",
     "BlockingWaitNoTimeout",
+    "UnboundedRequestQueue",
 ]
 
 
@@ -302,3 +303,76 @@ class BlockingWaitNoTimeout(Rule):
                     "queue .get() without timeout= hangs if the producer "
                     "died; poll with timeout= and check the worker is alive",
                 )
+
+
+# constructors whose no-argument form is an unbounded FIFO
+_UNBOUNDED_QUEUES = {
+    "queue.Queue",
+    "queue.LifoQueue",
+    "queue.PriorityQueue",
+    "multiprocessing.Queue",
+    "multiprocessing.JoinableQueue",
+}
+
+
+@register_rule
+class UnboundedRequestQueue(Rule):
+    id = "PRJ005"
+    name = "unbounded-request-queue"
+    family = "project"
+    rationale = (
+        "an unbounded request buffer turns overload into unbounded memory "
+        "growth and unbounded queueing delay — by the time anything "
+        "surfaces, every queued request has already missed its deadline.  "
+        "Library queues must carry a capacity: pass maxsize=/maxlen=, or "
+        "enforce an explicit admission bound that REJECTS (like "
+        "repro.serve.RequestQueue) and suppress with the justification."
+    )
+
+    def check(self, ctx: FileContext):
+        if not ctx.is_library:
+            return
+        for call in ctx.calls():
+            target = ctx.resolve(call.func)
+            if target in _UNBOUNDED_QUEUES:
+                # a positional arg or maxsize= states the bound
+                if call.args or any(
+                    kw.arg == "maxsize" for kw in call.keywords
+                ):
+                    continue
+                yield self.finding(
+                    ctx,
+                    call,
+                    f"{target}() without maxsize is an unbounded buffer; "
+                    "bound it or shed load explicitly at admission",
+                )
+            elif target == "queue.SimpleQueue":
+                yield self.finding(
+                    ctx,
+                    call,
+                    "queue.SimpleQueue cannot be bounded at all; use "
+                    "queue.Queue(maxsize=...) for request buffering",
+                )
+            elif target == "collections.deque":
+                if any(kw.arg == "maxlen" for kw in call.keywords) or len(
+                    call.args
+                ) >= 2:
+                    continue
+                if self._assigned_to_queue_name(ctx, call):
+                    yield self.finding(
+                        ctx,
+                        call,
+                        "deque used as a queue with no maxlen; bound it or "
+                        "enforce an explicit admission-depth check",
+                    )
+
+    @staticmethod
+    def _assigned_to_queue_name(ctx: FileContext, call: ast.Call) -> bool:
+        """Only deques *named* like queues are in scope — scratch deques
+        (visit stacks, sliding windows) are legitimate unbounded uses."""
+        parent = ctx.parent(call)
+        if isinstance(parent, ast.Assign):
+            return any(_queue_like(t) for t in parent.targets)
+        if isinstance(parent, ast.AnnAssign):
+            return _queue_like(parent.target)
+        return False

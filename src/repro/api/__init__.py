@@ -41,6 +41,12 @@ from repro.core.sampling.service import (
     SamplingService,
     SamplingSpec,
 )
+from repro.serve import (
+    GNNServer,
+    ServeRequest,
+    ServeResponse,
+    ServeStats,
+)
 from repro.core.storage import (
     ArrayFeatureSource,
     DFSTier,
@@ -73,6 +79,10 @@ __all__ = [
     "FaultSpec",
     "InjectedFault",
     "RetryPolicy",
+    "GNNServer",
+    "ServeRequest",
+    "ServeResponse",
+    "ServeStats",
     "ArrayFeatureSource",
     "DFSTier",
     "FeatureSource",

@@ -104,6 +104,17 @@ class GLISPConfig:
     checkpoint_every: int = 0
     checkpoint_dir: str | None = None
 
+    # -- online serving ------------------------------------------------------
+    # admission-queue bound for GLISPSystem.server(); a full queue REJECTS
+    # (explicit status="rejected" response) rather than buffering unboundedly
+    serve_queue_depth: int = 64
+    # a partial batch flushes once its oldest request has waited this long
+    # (0 = flush every step); full batches flush immediately
+    serve_max_batch_delay_ms: float = 2.0
+    # default per-request deadline; a request whose sample has not landed by
+    # then completes with status="timeout".  None = no deadline
+    serve_deadline_ms: float | None = 100.0
+
     seed: int = 0
 
     # -----------------------------------------------------------------------
@@ -232,6 +243,20 @@ class GLISPConfig:
             )
         if self.checkpoint_every > 0 and self.checkpoint_dir is None:
             raise ValueError("checkpoint_every > 0 requires a checkpoint_dir")
+        if self.serve_queue_depth <= 0:
+            raise ValueError(
+                f"serve_queue_depth must be positive, got {self.serve_queue_depth}"
+            )
+        if self.serve_max_batch_delay_ms < 0:
+            raise ValueError(
+                "serve_max_batch_delay_ms must be >= 0, got "
+                f"{self.serve_max_batch_delay_ms}"
+            )
+        if self.serve_deadline_ms is not None and self.serve_deadline_ms <= 0:
+            raise ValueError(
+                "serve_deadline_ms must be positive or None, got "
+                f"{self.serve_deadline_ms}"
+            )
         if self.infer_mode not in ("bucketed", "reference"):
             raise ValueError(
                 f"infer_mode must be 'bucketed' or 'reference', got {self.infer_mode!r}"

@@ -253,7 +253,9 @@ class BatchPipeline:
             if self._submit is not None:
                 self._next_key()
         windowed = self.inflight > 1 and self._submit is not None
-        queue: collections.deque = collections.deque()
+        # bounded by construction: the refill loop below never grows it past
+        # self.inflight (validated positive), so no maxlen is needed
+        queue: collections.deque = collections.deque()  # glint: disable=PRJ005 -- see above
         try:
             while True:
                 if windowed:

@@ -436,3 +436,34 @@ class GLISPSystem:
         the first); exposes ``jit_trace_count()``/``shape_count()`` for
         ``repro.analysis.recompile_guard``."""
         return self._infer_cache[1] if self._infer_cache is not None else None
+
+    # -- online serving ------------------------------------------------
+    def server(
+        self,
+        *,
+        queue_depth: int | None = None,
+        max_batch_delay_ms: float | None = None,
+        deadline_ms: float | None | str = "config",
+    ):
+        """An online :class:`repro.serve.GNNServer` over the last
+        ``infer_layerwise`` run (call that first — serving recomputes only
+        the final layer, reading the layer-(K-1) store through a demand
+        cache).  Knobs default to the config's ``serve_*`` fields;
+        ``deadline_ms=None`` explicitly disables the request deadline."""
+        from repro.serve.server import GNNServer  # lazy: avoids import cycle
+
+        cfg = self.config
+        return GNNServer(
+            self,
+            queue_depth=(
+                queue_depth if queue_depth is not None else cfg.serve_queue_depth
+            ),
+            max_batch_delay_ms=(
+                max_batch_delay_ms
+                if max_batch_delay_ms is not None
+                else cfg.serve_max_batch_delay_ms
+            ),
+            deadline_ms=(
+                cfg.serve_deadline_ms if deadline_ms == "config" else deadline_ms
+            ),
+        )

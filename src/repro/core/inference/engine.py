@@ -185,6 +185,14 @@ class InferenceResult:
         return sum(s.vertices_computed for s in self.layer_stats)
 
 
+@dataclass
+class _ServeSliceStats:
+    """Throwaway ``slice_compiles`` sink for online ``run_layer_batch``
+    calls (the lifetime counters on the engine still record the shape)."""
+
+    slice_compiles: int = 0
+
+
 class LayerwiseInferenceEngine:
     def __init__(
         self,
@@ -239,6 +247,12 @@ class LayerwiseInferenceEngine:
         self.retry_policy = retry_policy
         self.faults = faults
         self._jitted: dict = {}  # layer k -> jit'd slice (shape-keyed inside)
+        # filled by run(): the per-layer DFS stores (index k = layer-k
+        # embeddings, 0 = input features) and the last InferenceResult —
+        # the online serving tier reads layer K-1 through these instead of
+        # re-opening the store paths (keeps live checksums)
+        self.layer_stores: list = []
+        self.last_result: InferenceResult | None = None
         self._shapes_seen: set = set()  # (layer, Bp, Ep) -> compile counter
         # lifetime views for repro.analysis.recompile_guard: actual traces
         # of each jit'd slice, and every (layer, Bp, Ep) ever executed
@@ -340,6 +354,7 @@ class LayerwiseInferenceEngine:
         result = InferenceResult(
             final_store=store_prev, newid=newid, owner=owner
         )
+        stores = [store_prev]
 
         # inference order within each worker follows the reorder ids
         part_verts = []
@@ -452,9 +467,30 @@ class LayerwiseInferenceEngine:
                 stats.absorb(cache.stats)
                 cache.evict()  # release this partition's cache residency
             result.layer_stats.append(stats)
+            stores.append(store_next)
             store_prev = store_next
         result.final_store = store_prev
+        self.layer_stores = stores
+        self.last_result = result
         return result
+
+    # -- online serving entry point --------------------------------------
+    def run_layer_batch(self, k, h_self, h_nbr, seg, et=None) -> np.ndarray:
+        """One layer-``k`` slice over an online batch, outside ``run()``.
+
+        Shares the offline path's jit cache, bucket ladder, and
+        ``_trace_counts``/``_shapes_lifetime`` bookkeeping, so
+        ``recompile_guard`` covers serving with the same
+        one-compile-per-(layer, bucket) bound.  Falls back to the plain
+        numpy layer callable when the slice is not jit-eligible."""
+        layer_fn = self.layer_fns[k]
+        slice_fn = self._slice_fn(k, layer_fn)
+        if slice_fn is not None:
+            shim = _ServeSliceStats()
+            return self._run_slice(k, slice_fn, h_self, h_nbr, seg, et, shim)
+        if getattr(layer_fn, "needs_etype", False):
+            return np.asarray(layer_fn(k, h_self, h_nbr, seg, et))
+        return np.asarray(layer_fn(k, h_self, h_nbr, seg))
 
     # -- bucketed device execution --------------------------------------
     def _run_slice(self, k, slice_fn, h_self, h_nbr, seg, et, result):

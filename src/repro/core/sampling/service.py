@@ -548,7 +548,11 @@ class SampleTicket:
                     f"complete within {timeout}s "
                     f"({self._service.inflight()} requests in flight)"
                 )
-            self._service._advance_round()
+            # pass the deadline down so contended rounds wait on the
+            # scheduler lock only until expiry, not indefinitely — a 10 ms
+            # timeout must come back in ~10 ms even when another thread
+            # holds the service mid-round
+            self._service._advance_round(deadline=deadline)
         if self._state.cancelled:
             raise RuntimeError("sample request was cancelled")
         return self._state.result
@@ -950,9 +954,21 @@ class SamplingService:
             if state in self._inflight:
                 self._inflight.remove(state)
 
-    def _advance_round(self) -> None:
-        """One scheduling round: every in-flight request advances one hop."""
-        with self._lock:
+    def _advance_round(self, deadline: float | None = None) -> None:
+        """One scheduling round: every in-flight request advances one hop.
+
+        ``deadline`` (absolute monotonic seconds) bounds the wait for the
+        scheduler lock: past it the round is skipped and the caller's own
+        deadline check fires.  Without it a blocking acquire could pin a
+        short ``result(timeout=)`` behind a long round on another thread."""
+        if deadline is None:
+            acquired = self._lock.acquire()
+        else:
+            remaining = deadline - time.monotonic()
+            acquired = self._lock.acquire(timeout=max(0.0, min(remaining, 0.05)))
+        if not acquired:
+            return
+        try:
             active = list(self._inflight)
             if not active:
                 return
@@ -976,6 +992,8 @@ class SamplingService:
             self.parallel_work += max(deltas) if deltas else 0.0
             self.total_work += sum(deltas)
             self._inflight = [st for st in self._inflight if not st.done]
+        finally:
+            self._lock.release()
 
     def _dispatch_gather(self, p: int, ci: int, chunk: np.ndarray, key, hop, spec):
         """Fault-tolerant dispatch of one chunk to partition ``p``.

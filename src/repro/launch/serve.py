@@ -5,6 +5,11 @@
 
 Runs the reduced config on CPU (full configs are exercised via dryrun.py on
 the production mesh).  Reports prefill and per-token decode latency.
+
+This launcher serves the *transformer* stack only.  For online GNN
+embedding serving — continuous batching over a layerwise-inference
+artifact — use ``GLISPSystem.server()`` (``repro.serve``); the end-to-end
+demo is ``examples/serve_gnn.py``.
 """
 from __future__ import annotations
 

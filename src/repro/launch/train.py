@@ -83,7 +83,9 @@ def run_lm(args):
     cfg = get_config(args.arch, reduced=args.reduced)
     if cfg.input_mode == "embeddings":
         raise SystemExit(
-            f"{cfg.name} consumes precomputed embeddings; use examples/serve_decode.py"
+            f"{cfg.name} consumes precomputed embeddings; use "
+            "python -m repro.launch.serve (transformer decode) or "
+            "examples/serve_gnn.py (online GNN serving)"
         )
     tr = LMTrainer(cfg, batch=args.batch, seq_len=args.seq, seed=args.seed)
     log = tr.train(args.steps, log_every=args.log_every)

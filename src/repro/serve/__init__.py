@@ -1,0 +1,23 @@
+"""``repro.serve`` — online GNN inference serving.
+
+The serving tier answers "embed these vertices now" requests over a
+completed layerwise inference run: bounded admission, continuous batching
+into the engine's compiled shape buckets, per-request deadlines, and
+SLO-grade metrics.  Construct via ``GLISPSystem.server()``.
+"""
+from repro.serve.batcher import ContinuousBatcher
+from repro.serve.queue import RequestQueue
+from repro.serve.request import ServeRequest, ServeResponse
+from repro.serve.server import GNNServer
+from repro.serve.stats import LatencyEstimator, P2Quantile, ServeStats
+
+__all__ = [
+    "ContinuousBatcher",
+    "GNNServer",
+    "LatencyEstimator",
+    "P2Quantile",
+    "RequestQueue",
+    "ServeRequest",
+    "ServeResponse",
+    "ServeStats",
+]

@@ -1,0 +1,23 @@
+"""PRJ005: unbounded request-queue constructions in library code (this
+file sits under a repro/ directory, so it counts as library code)."""
+import collections
+import multiprocessing
+import queue
+from collections import deque
+
+
+class Serverish:
+    def __init__(self, depth):
+        self.request_q = queue.Queue()  # expect[PRJ005]
+        self.retry_queue = queue.PriorityQueue()  # expect[PRJ005]
+        self.work_q = multiprocessing.Queue()  # expect[PRJ005]
+        self.event_q = queue.SimpleQueue()  # expect[PRJ005]
+        self.reply_queue = collections.deque()  # expect[PRJ005]
+        self._q = deque()  # expect[PRJ005]
+        # bounded or not-a-queue: all fine
+        self.bounded_q = queue.Queue(maxsize=depth)
+        self.sized_q = queue.Queue(depth)
+        self.ring_queue = deque(maxlen=depth)
+        self.visit_stack = deque()  # scratch structure, not a queue name
+        window: deque = deque([0], depth)  # positional maxlen
+        self.window = window

@@ -265,7 +265,9 @@ def test_sample_timeout(small_graph, partitioned, monkeypatch):
 
     svc = _service(small_graph, partitioned, ticket_timeout=0.05)
     ticket = svc.submit(SEEDS[:8], _spec((4,)), key=(2, 0))
-    monkeypatch.setattr(svc, "_advance_round", lambda: time.sleep(0.01))
+    monkeypatch.setattr(
+        svc, "_advance_round", lambda deadline=None: time.sleep(0.01)
+    )
     with pytest.raises(SampleTimeout):
         ticket.result()  # falls back to the service-level ticket_timeout
     monkeypatch.undo()
