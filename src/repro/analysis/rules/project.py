@@ -18,6 +18,7 @@ __all__ = [
     "ConfigRegistryDrift",
     "BlockingWaitNoTimeout",
     "UnboundedRequestQueue",
+    "MultiprocessingHygiene",
 ]
 
 
@@ -376,3 +377,78 @@ class UnboundedRequestQueue(Rule):
         if isinstance(parent, ast.AnnAssign):
             return _queue_like(parent.target)
         return False
+
+
+# receivers whose ``.Process`` attribute is the multiprocessing ctor:
+# the module itself or a start-method context (``mp.get_context("fork")``
+# conventionally lands in a name like ``ctx``)
+_MP_RECEIVERS = ("mp", "multiprocessing", "ctx", "context")
+
+# receiver names that denote a child process handle; thread handles
+# (``t``, ``thread``) stay out of scope — a daemon thread dies with the
+# interpreter, an unjoined child process does not
+_PROC_NAMES = ("proc", "worker", "child", "popen", "subproc")
+
+
+def _recv_name(recv: ast.expr) -> str | None:
+    if isinstance(recv, ast.Name):
+        return recv.id
+    if isinstance(recv, ast.Attribute):
+        return recv.attr
+    return None
+
+
+def _proc_like(recv: ast.expr) -> bool:
+    name = _recv_name(recv)
+    return name is not None and any(p in name.lower() for p in _PROC_NAMES)
+
+
+@register_rule
+class MultiprocessingHygiene(Rule):
+    id = "PRJ006"
+    name = "multiprocessing-hygiene"
+    family = "project"
+    rationale = (
+        "a child process spawned without daemon=True outlives a crashed "
+        "parent as an orphan holding its pipe fds open, and a bare "
+        ".join()/.wait() on a process handle blocks forever when the child "
+        "wedges instead of exiting — the distributed tier's crash-recovery "
+        "contract requires every spawn to state daemon= and every reap to "
+        "carry a timeout= bound (suppress with the justification where the "
+        "child is provably already dead, e.g. after SIGKILL)."
+    )
+
+    def check(self, ctx: FileContext):
+        if not ctx.is_library:
+            return
+        for call in ctx.calls():
+            fn = call.func
+            if not isinstance(fn, ast.Attribute):
+                continue
+            if fn.attr == "Process":
+                resolved = ctx.resolve(fn) or ""
+                recv = _recv_name(fn.value) or ""
+                if resolved != "multiprocessing.Process" and not any(
+                    m in recv.lower() for m in _MP_RECEIVERS
+                ):
+                    continue  # some other .Process attribute
+                if any(kw.arg == "daemon" for kw in call.keywords):
+                    continue
+                yield self.finding(
+                    ctx,
+                    call,
+                    "Process(...) without daemon=: an orphaned child "
+                    "outlives a crashed parent; state daemon= explicitly",
+                )
+            elif fn.attr in ("join", "wait") and _proc_like(fn.value):
+                if call.args or any(
+                    kw.arg == "timeout" for kw in call.keywords
+                ):
+                    continue
+                yield self.finding(
+                    ctx,
+                    call,
+                    f".{fn.attr}() on a process handle without timeout= "
+                    "blocks forever if the child wedges; bound the reap "
+                    "with timeout=",
+                )

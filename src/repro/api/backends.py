@@ -150,6 +150,10 @@ class _ServiceBackend:
         # parallel/total work accumulators — no adapter workaround needed
         self.service.reset_stats()
 
+    def close(self, timeout: float = 2.0) -> None:
+        """Release the remote worker pool, if this backend has one."""
+        self.service.close(timeout=timeout)
+
     @property
     def client(self):
         """Legacy alias: the service plays the old client role."""
@@ -165,6 +169,27 @@ class _ServiceBackend:
 
     def __repr__(self) -> str:
         return f"{type(self).__name__}(servers={len(self.service.servers)})"
+
+
+def _build_dispatcher(parts: list[GraphPartition], config: "GLISPConfig", cost: str):
+    """The remote worker pool for ``dist_transport != "inproc"`` — one
+    forked process per partition, mirroring the service's replica layout
+    and fault machinery so results stay bit-identical."""
+    if config.dist_transport == "inproc":
+        return None
+    from repro.dist.client import WorkerPool  # lazy: inproc stays fork-free
+
+    return WorkerPool(
+        parts,
+        transport=config.dist_transport,
+        seed=config.seed,
+        cost_model=cost,
+        replicas=config.server_replicas,
+        fault_plan=config.fault_plan,
+        retry_policy=config.retry_policy,
+        respawns=config.worker_respawns,
+        dispatch_timeout=config.dist_dispatch_timeout,
+    )
 
 
 class GatherApplyBackend(_ServiceBackend):
@@ -210,6 +235,7 @@ def _build_gather_apply(
         fault_plan=config.fault_plan,
         retry_policy=config.retry_policy,
         ticket_timeout=config.ticket_timeout,
+        dispatcher=_build_dispatcher(parts, config, cost),
     )
     return GatherApplyBackend(service)
 
@@ -239,6 +265,7 @@ def _build_edge_cut(
         fault_plan=config.fault_plan,
         retry_policy=config.retry_policy,
         ticket_timeout=config.ticket_timeout,
+        dispatcher=_build_dispatcher(parts, config, cost),
     )
     return EdgeCutBackend(service)
 

@@ -56,6 +56,14 @@ class GLISPConfig:
     # loader/trainer submission window: how many sample requests ride
     # in-flight on the service at once (1 = the old blocking behavior)
     inflight: int = 2
+    # where the sampling servers live: "inproc" (the default in-process
+    # simulation) or "mp"/"socket" — one forked worker process per
+    # partition behind a repro.dist transport (pipes / socketpair).
+    # Results are bit-identical across all three (keyed per-dispatch RNG)
+    dist_transport: str = "inproc"
+    # client-side deadline for one remote dispatch answer; also the
+    # window in which a dead worker must be respawned
+    dist_dispatch_timeout: float = 60.0
 
     # -- batch pipeline ------------------------------------------------------
     batch_size: int = 256
@@ -228,6 +236,16 @@ class GLISPConfig:
         if self.ticket_timeout is not None and self.ticket_timeout <= 0:
             raise ValueError(
                 f"ticket_timeout must be positive or None, got {self.ticket_timeout}"
+            )
+        if self.dist_transport not in ("inproc", "mp", "socket"):
+            raise ValueError(
+                "dist_transport must be 'inproc', 'mp' or 'socket', got "
+                f"{self.dist_transport!r}"
+            )
+        if self.dist_dispatch_timeout <= 0:
+            raise ValueError(
+                "dist_dispatch_timeout must be positive, got "
+                f"{self.dist_dispatch_timeout}"
             )
         if self.server_replicas < 1:
             raise ValueError(

@@ -131,8 +131,22 @@ class BatchPipeline:
             )
         self.prefetch = prefetch
         self.inflight = inflight
+        # a remote-dispatching service (dist_transport != "inproc") cannot
+        # sit behind a forked prefetch producer: the fork would duplicate
+        # the worker-pool channel fds, and parent + child reading the same
+        # pipes interleaves partial frames.  Thread-mode prefetch keeps the
+        # pool's fds in one process (the remote workers provide the real
+        # parallelism anyway).
+        service = getattr(backend, "service", None)
+        remote = service is not None and getattr(service, "dispatcher", None) is not None
+        if remote and workers == "process":
+            raise ValueError(
+                "workers='process' cannot wrap a remote-dispatch sampling "
+                "service (forked producer would share the worker-pool "
+                "channels); use workers='thread' or dist_transport='inproc'"
+            )
         self.workers = (
-            ("process" if _FORK_AVAILABLE else "thread")
+            (("thread" if remote else "process") if _FORK_AVAILABLE else "thread")
             if workers == "auto"
             else workers
         )

@@ -197,6 +197,21 @@ class GLISPSystem:
     def reset_stats(self) -> None:
         self.backend.reset_stats()
 
+    # -- lifecycle -----------------------------------------------------
+    def close(self, timeout: float = 2.0) -> None:
+        """Release owned OS resources — today that is the remote sampling
+        worker pool when ``dist_transport != "inproc"``.  Idempotent; the
+        in-process system is a no-op, so unconditional cleanup is cheap."""
+        close = getattr(self.backend, "close", None)
+        if close is not None:
+            close(timeout=timeout)
+
+    def __enter__(self) -> "GLISPSystem":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
     # -- batch pipeline ------------------------------------------------
     def loader(
         self,
@@ -310,6 +325,45 @@ class GLISPSystem:
         )
         tr.train(epochs=epochs, log_every=log_every)
         return tr
+
+    def dp_trainer(
+        self,
+        model,
+        train_ids: np.ndarray,
+        *,
+        mesh=None,
+        opt=None,
+        batch_size: int | None = None,
+        prefetch: int | None = None,
+        reference: bool = False,
+    ):
+        """A ``DataParallelGNNTrainer``: the train step sharded over the
+        mesh's data axis (``launch.make_local_mesh`` by default), params
+        replicated, one sampling client per shard.  ``reference=True``
+        additionally runs an unsharded single-device step on the same
+        batches and logs its losses for equivalence checks."""
+        from repro.train.data_parallel import (  # lazy: avoids import cycle
+            DataParallelGNNTrainer,
+        )
+
+        cfg = self.config
+        return DataParallelGNNTrainer(
+            model,
+            self.backend,
+            self.graph,
+            train_ids,
+            mesh=mesh,
+            spec=cfg.sampling_spec(),
+            batch_size=batch_size if batch_size is not None else cfg.batch_size,
+            opt=opt,
+            seed=cfg.seed,
+            prefetch=prefetch if prefetch is not None else cfg.prefetch,
+            inflight=cfg.inflight,
+            vertex_quantum=cfg.vertex_quantum,
+            edge_quantum=cfg.edge_quantum,
+            ticket_timeout=cfg.ticket_timeout,
+            reference=reference,
+        )
 
     # -- layerwise inference -------------------------------------------
     def infer_layerwise(

@@ -64,6 +64,8 @@ __all__ = [
     "SampleTicket",
     "SampleTimeout",
     "SamplingService",
+    "ServiceStats",
+    "request_rng",
     "GatherApplyRouting",
     "OwnerRouting",
     "GatherApplyClient",
@@ -87,6 +89,19 @@ _KEY_MASK = (1 << 64) - 1
 _GATHER_TAG = 0x6A7
 
 _TRIM_TAG = 0x7213
+
+
+def request_rng(seed: int, key: tuple, hop: int, *tail: int) -> np.random.Generator:
+    """The deterministic RNG stream for ``(service seed, request key, hop,
+    *tail)`` — length-prefixed entropy, so keys of different lengths never
+    alias.  Module-level rather than a service method because remote
+    sampling workers (``repro.dist.worker``) must re-derive the very same
+    streams from wire-carried key material; this function is the single
+    definition both deployments share."""
+    seq = np.random.SeedSequence(
+        (int(seed) & _KEY_MASK, len(key), *key, hop, *tail)
+    )
+    return np.random.default_rng(seq)
 
 
 # ---------------------------------------------------------------------------
@@ -176,6 +191,32 @@ class ServerStats:
         self.retries += other.retries
         self.failovers += other.failovers
         self.degraded += other.degraded
+
+
+@dataclass
+class ServiceStats(ServerStats):
+    """``SamplingService.stats()``: the merged per-server counters plus the
+    service-level work accounting, with the *modeled* numbers explicitly
+    named as such so benchmarks can no longer conflate them with the
+    *measured* wall-clock per-round time reported alongside."""
+
+    # the Fig.-10 work model (edges touched + per-seed overhead), NOT a
+    # measurement: per-round MAX across servers / per-round SUM
+    modeled_parallel_work: float = 0.0
+    modeled_total_work: float = 0.0
+    # measured: scheduling rounds driven and their wall-clock total
+    rounds: int = 0
+    measured_round_seconds: float = 0.0
+
+    @property
+    def parallel_work(self) -> float:
+        """DEPRECATED alias for :attr:`modeled_parallel_work`."""
+        return self.modeled_parallel_work
+
+    @property
+    def total_work(self) -> float:
+        """DEPRECATED alias for :attr:`modeled_total_work`."""
+        return self.modeled_total_work
 
 
 class SamplingServer:
@@ -654,6 +695,8 @@ def execute_hop(
     max_server_batch: int = 0,
     on_dispatch=None,
     dispatch=None,
+    submit_dispatch=None,
+    collect_dispatch=None,
 ):
     """One hop for one request: per-server (chunked) gathers + optional Apply.
 
@@ -673,40 +716,62 @@ def execute_hop(
     which marks the hop degraded.  ``on_dispatch(part_id, chunk, server)``
     observes every SERVED chunk (the coalescing accountant) — lost
     dispatches are not observed, so rebates never touch uncharged stats.
+    ``submit_dispatch(part_id, chunk_idx, chunk) -> handle`` +
+    ``collect_dispatch(handle)`` split the dispatch into two phases (the
+    remote worker-pool path): every chunk is submitted before any answer
+    is collected, so real worker processes overlap, and answers are
+    collected in submission order — the merge sees chunks in exactly the
+    sequence the single-phase loop would have produced, which is what
+    keeps remote mode bit-identical to in-process mode.
 
     Returns ``(src, nbr, eid, lost)`` where ``lost`` counts dispatches
     that produced no answer.
     """
+    jobs = [
+        (p, ci, chunk, srv)
+        for p, (srv, sub) in enumerate(zip(servers, routed))
+        for ci, chunk in enumerate(_chunked(sub, max_server_batch))
+    ]
+    handles = (
+        [submit_dispatch(p, ci, chunk) for p, ci, chunk, _ in jobs]
+        if submit_dispatch is not None
+        else None
+    )
     parts_s, parts_n, parts_x, parts_e = [], [], [], []
     lost = 0
-    for p, (srv, sub) in enumerate(zip(servers, routed)):
-        for ci, chunk in enumerate(_chunked(sub, max_server_batch)):
-            if dispatch is not None:
-                served = dispatch(p, ci, chunk)
-                if served is None:
-                    lost += 1
-                    continue
-                srv_used, res = served
+    for j, (p, ci, chunk, srv) in enumerate(jobs):
+        if handles is not None:
+            served = collect_dispatch(handles[j])
+            if served is None:
+                lost += 1
+                continue
+            srv_used, res = served
+        elif dispatch is not None:
+            served = dispatch(p, ci, chunk)
+            if served is None:
+                lost += 1
+                continue
+            srv_used, res = served
+        else:
+            rng = rng_for(p, ci) if rng_for is not None else None
+            srv_used = srv
+            res = _gather_once(
+                srv, chunk, fanout, direction,
+                weighted=weighted, replace=replace, rng=rng,
+            )
+        if on_dispatch is not None:
+            on_dispatch(p, chunk, srv_used)
+        if weighted:
+            s, n, sc, e = res
+            if merge:
+                parts_x.append(sc)
             else:
-                rng = rng_for(p, ci) if rng_for is not None else None
-                srv_used = srv
-                res = _gather_once(
-                    srv, chunk, fanout, direction,
-                    weighted=weighted, replace=replace, rng=rng,
-                )
-            if on_dispatch is not None:
-                on_dispatch(p, chunk, srv_used)
-            if weighted:
-                s, n, sc, e = res
-                if merge:
-                    parts_x.append(sc)
-                else:
-                    s, n, e = _topk_by_score(s, n, e, sc, fanout)
-            else:
-                s, n, e = res
-            parts_s.append(s)
-            parts_n.append(n)
-            parts_e.append(e)
+                s, n, e = _topk_by_score(s, n, e, sc, fanout)
+        else:
+            s, n, e = res
+        parts_s.append(s)
+        parts_n.append(n)
+        parts_e.append(e)
     if not parts_s:
         z = np.zeros(0, np.int64)
         return z, z, z, lost
@@ -775,6 +840,7 @@ class SamplingService:
         fault_plan=None,
         retry_policy: RetryPolicy | None = None,
         ticket_timeout: float | None = None,
+        dispatcher=None,
     ):
         """``replicas`` spawns ``replicas - 1`` extra servers per partition
         sharing the primary's ``GraphPartition`` (no data copy — the
@@ -783,7 +849,15 @@ class SamplingService:
         breaker is open.  ``fault_plan`` (a ``FaultPlan`` or shared
         ``FaultInjector``) arms injection at every server's gather site;
         ``retry_policy`` bounds per-replica attempts; ``ticket_timeout``
-        is the default deadline for ``SampleTicket.result()``."""
+        is the default deadline for ``SampleTicket.result()``.
+
+        ``dispatcher`` routes every gather to real worker processes
+        instead of the in-process server objects: anything with the
+        ``repro.dist.client.WorkerPool`` contract (``dispatch(p, ci,
+        chunk, key, hop, spec) -> handle``, ``collect(handle)``, plus
+        ``server_stats/health/workloads/reset_stats/close``).  The
+        keyed per-dispatch RNG makes the two paths bit-identical; the
+        local servers then only provide routing metadata and sit idle."""
         if replicas < 1:
             raise ValueError(f"replicas must be >= 1, got {replicas}")
         self.servers = servers
@@ -820,8 +894,11 @@ class SamplingService:
         self.has_global_eids = all(
             s.part.edge_global_id is not None for s in servers
         )
-        self.parallel_work = 0.0
-        self.total_work = 0.0
+        self.dispatcher = dispatcher
+        self.modeled_parallel_work = 0.0
+        self.modeled_total_work = 0.0
+        self.rounds = 0
+        self.measured_round_seconds = 0.0
         self._inflight: list[_RequestState] = []
         self._auto_key = 0
         # rounds are serialized: concurrent consumers (e.g. a thread-mode
@@ -901,34 +978,77 @@ class SamplingService:
             )
         return router
 
-    def stats(self) -> ServerStats:
+    @property
+    def parallel_work(self) -> float:
+        """DEPRECATED alias for :attr:`modeled_parallel_work` — the name
+        hid that this is the Fig.-10 *work model*, not a measurement."""
+        return self.modeled_parallel_work
+
+    @parallel_work.setter
+    def parallel_work(self, value: float) -> None:
+        self.modeled_parallel_work = float(value)
+
+    @property
+    def total_work(self) -> float:
+        """DEPRECATED alias for :attr:`modeled_total_work`."""
+        return self.modeled_total_work
+
+    @total_work.setter
+    def total_work(self, value: float) -> None:
+        self.modeled_total_work = float(value)
+
+    def stats(self) -> ServiceStats:
         """Service-level aggregate: per-server counters (primaries and
-        replicas) merged into one, plus the service's lost-dispatch
-        count in ``degraded``."""
-        merged = ServerStats()
+        replicas, remote workers' included) merged into one, the
+        service's lost-dispatch count in ``degraded``, the explicitly
+        modeled work totals, and the measured per-round wall clock."""
+        merged = ServiceStats()
+        if self.dispatcher is not None:
+            for d in self.dispatcher.server_stats().values():
+                merged.merge(ServerStats(**d))
         for srv in self._all_servers:
             merged.merge(srv.stats)
         merged.degraded += self.degraded_dispatches
+        merged.modeled_parallel_work = self.modeled_parallel_work
+        merged.modeled_total_work = self.modeled_total_work
+        merged.rounds = self.rounds
+        merged.measured_round_seconds = self.measured_round_seconds
         return merged
 
     def server_health(self) -> dict[str, str]:
         """Health per replica site, e.g. ``{"server.0.0": "up",
-        "server.0.1": "quarantined"}`` (circuit-breaker view)."""
+        "server.0.1": "quarantined"}`` (circuit-breaker view).  With a
+        remote dispatcher the workers' breakers answer, plus a
+        ``worker.<p>`` process-liveness row per worker."""
+        if self.dispatcher is not None:
+            return self.dispatcher.health()
         return {srv.site: srv.health for srv in self._all_servers}
 
     def server_workloads(self) -> np.ndarray:
         """Modeled work per partition, summed over that partition's
         replicas (shape unchanged from the replica-free layout)."""
+        if self.dispatcher is not None:
+            return self.dispatcher.workloads()
         return np.array(
             [sum(s.stats.work_units for s in group) for group in self.groups]
         )
 
     def reset_stats(self) -> None:
+        if self.dispatcher is not None:
+            self.dispatcher.reset_stats()
         for s in self._all_servers:
             s.stats = ServerStats()
         self.degraded_dispatches = 0
-        self.parallel_work = 0.0
-        self.total_work = 0.0
+        self.modeled_parallel_work = 0.0
+        self.modeled_total_work = 0.0
+        self.rounds = 0
+        self.measured_round_seconds = 0.0
+
+    def close(self, timeout: float = 2.0) -> None:
+        """Shut down the remote worker pool, if any (in-process services
+        have nothing to release)."""
+        if self.dispatcher is not None:
+            self.dispatcher.close(timeout=timeout)
 
     def __repr__(self) -> str:
         return (
@@ -939,11 +1059,7 @@ class SamplingService:
 
     # -- scheduler -----------------------------------------------------
     def _rng(self, key: tuple, hop: int, *tail: int) -> np.random.Generator:
-        # length-prefixed entropy: keys of different lengths never alias
-        seq = np.random.SeedSequence(
-            (self.seed, len(key), *key, hop, *tail)
-        )
-        return np.random.default_rng(seq)
+        return request_rng(self.seed, key, hop, *tail)
 
     def _cancel(self, state: _RequestState) -> None:
         with self._lock:
@@ -972,7 +1088,17 @@ class SamplingService:
             active = list(self._inflight)
             if not active:
                 return
-            w0 = [srv.stats.work_units for srv in self._all_servers]
+            t0 = time.perf_counter()
+            # remote mode: work is booked in the worker processes; the
+            # snapshots riding on collected results give per-partition
+            # (= per worker host) sums with no extra round-trip.  The
+            # parallel-work MAX is then over hosts rather than over
+            # individual replica servers — the right granularity, since a
+            # partition's replicas share one host either way.
+            if self.dispatcher is not None:
+                w0 = self.dispatcher.snapshot_workloads()
+            else:
+                w0 = [srv.stats.work_units for srv in self._all_servers]
             # dispatch log keyed by the SERVING server (primary or a
             # failover replica), so coalescing rebates hit the stats that
             # were actually charged
@@ -985,12 +1111,15 @@ class SamplingService:
                 self._execute_hop(st, on_dispatch)
             if self.coalesce:
                 self._coalesce_credit(log)
-            deltas = [
-                srv.stats.work_units - w
-                for srv, w in zip(self._all_servers, w0)
-            ]
-            self.parallel_work += max(deltas) if deltas else 0.0
-            self.total_work += sum(deltas)
+            if self.dispatcher is not None:
+                w1 = self.dispatcher.snapshot_workloads()
+            else:
+                w1 = [srv.stats.work_units for srv in self._all_servers]
+            deltas = [b - a for a, b in zip(w0, w1)]
+            self.modeled_parallel_work += max(deltas) if deltas else 0.0
+            self.modeled_total_work += sum(deltas)
+            self.rounds += 1
+            self.measured_round_seconds += time.perf_counter() - t0
             self._inflight = [st for st in self._inflight if not st.done]
         finally:
             self._lock.release()
@@ -1036,22 +1165,47 @@ class SamplingService:
         spec = st.request.spec
         key = st.request.key
         hop = st.hop
-        s, n, e, lost = execute_hop(
-            self.servers,
-            self.routing.route(st.frontier),
-            spec.fanouts[hop],
-            weighted=spec.weighted,
-            replace=spec.replace,
-            direction=spec.direction,
-            merge=self.routing.merge,
-            trim_rng=self._rng(key, hop, _TRIM_TAG),
-            rng_for=lambda p, ci: self._rng(key, hop, p, ci, _GATHER_TAG),
-            max_server_batch=self.max_server_batch,
-            on_dispatch=on_dispatch,
-            dispatch=lambda p, ci, chunk: self._dispatch_gather(
-                p, ci, chunk, key, hop, spec
-            ),
-        )
+        if self.dispatcher is not None:
+            # remote path: submit every chunk to the worker pool before
+            # collecting any answer (real processes overlap), collect in
+            # submission order (merge order identical to in-process).
+            # No on_dispatch: the workers charge their own stats, so the
+            # coalescing rebate has nothing local to credit; lost counts
+            # land on the service here — the worker deliberately does not
+            # book them (that would double-count degraded in stats()).
+            s, n, e, lost = execute_hop(
+                self.servers,
+                self.routing.route(st.frontier),
+                spec.fanouts[hop],
+                weighted=spec.weighted,
+                replace=spec.replace,
+                direction=spec.direction,
+                merge=self.routing.merge,
+                trim_rng=self._rng(key, hop, _TRIM_TAG),
+                max_server_batch=self.max_server_batch,
+                submit_dispatch=lambda p, ci, chunk: self.dispatcher.dispatch(
+                    p, ci, chunk, key, hop, spec
+                ),
+                collect_dispatch=self.dispatcher.collect,
+            )
+            self.degraded_dispatches += lost
+        else:
+            s, n, e, lost = execute_hop(
+                self.servers,
+                self.routing.route(st.frontier),
+                spec.fanouts[hop],
+                weighted=spec.weighted,
+                replace=spec.replace,
+                direction=spec.direction,
+                merge=self.routing.merge,
+                trim_rng=self._rng(key, hop, _TRIM_TAG),
+                rng_for=lambda p, ci: self._rng(key, hop, p, ci, _GATHER_TAG),
+                max_server_batch=self.max_server_batch,
+                on_dispatch=on_dispatch,
+                dispatch=lambda p, ci, chunk: self._dispatch_gather(
+                    p, ci, chunk, key, hop, spec
+                ),
+            )
         if lost:
             st.result.degraded = True
             st.result.lost_dispatches += lost

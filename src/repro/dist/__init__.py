@@ -1,0 +1,38 @@
+"""``repro.dist`` — sampling servers behind a real transport.
+
+The in-process :class:`~repro.core.sampling.service.SamplingService`
+simulates GLISP's distributed sampling tier; this package makes it real:
+:mod:`~repro.dist.transport` is the versioned wire format and channel
+layer, :mod:`~repro.dist.worker` hosts one partition's server replicas in
+its own OS process, and :mod:`~repro.dist.client` is the
+:class:`WorkerPool` the service dispatches through when
+``GLISPConfig(dist_transport="mp"|"socket")`` is set.
+
+The PR 3 keyed-randomness design makes the split free of semantic drift:
+every dispatch's RNG is derived from ``(seed, request key, hop, server,
+chunk)``, so remote mode is bit-identical to in-process mode — the
+determinism tests assert it.
+"""
+from repro.dist.client import WorkerPool
+from repro.dist.transport import (
+    PROTOCOL_VERSION,
+    ChannelClosed,
+    DispatchResult,
+    ProtocolError,
+    SampleDispatch,
+    TruncatedFrame,
+    VersionMismatch,
+)
+from repro.dist.worker import WorkerHost
+
+__all__ = [
+    "PROTOCOL_VERSION",
+    "ChannelClosed",
+    "DispatchResult",
+    "ProtocolError",
+    "SampleDispatch",
+    "TruncatedFrame",
+    "VersionMismatch",
+    "WorkerHost",
+    "WorkerPool",
+]

@@ -221,6 +221,7 @@ class GNNServer:
                 done,
             )
         self.stats.cache_hit_ratios = self.cache.stats.hit_ratios()
+        self.stats.server_health = dict(self.system.server_health())
         return len(batch)
 
     def _compute(self, live: list) -> list[np.ndarray]:

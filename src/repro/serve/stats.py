@@ -174,6 +174,12 @@ class ServeStats:
     # (keys as HybridStats.hit_ratios(): "0:memory", "1:disk", ..., "dfs")
     cache_hit_ratios: dict = field(default_factory=dict)
 
+    # sampling-backend health by site (keys as system.server_health():
+    # "server.<part>.<replica>", plus "worker.<part>" rows under a remote
+    # dispatcher), refreshed after every batch — surfaces breaker/worker
+    # state on the same dashboard as the serving counters
+    server_health: dict = field(default_factory=dict)
+
     latency: LatencyEstimator = field(default_factory=LatencyEstimator)
 
     def note_queue_depth(self, depth: int) -> None:
@@ -211,5 +217,6 @@ class ServeStats:
             "occupancy": self.occupancy(),
             "edge_occupancy": self.edge_occupancy(),
             "cache_hit_ratios": dict(self.cache_hit_ratios),
+            "server_health": dict(self.server_health),
             "latency": self.latency.summary(),
         }

@@ -1,6 +1,11 @@
 from repro.train.optim import adamw_init, adamw_update, sgd_update, clip_by_global_norm
 from repro.train.checkpoint import save_checkpoint, load_checkpoint
 from repro.train.loop import GNNTrainer, LMTrainer
+from repro.train.data_parallel import (
+    DataParallelGNNTrainer,
+    DPTrainLog,
+    stack_batches,
+)
 
 __all__ = [
     "adamw_init",
@@ -11,4 +16,7 @@ __all__ = [
     "load_checkpoint",
     "GNNTrainer",
     "LMTrainer",
+    "DataParallelGNNTrainer",
+    "DPTrainLog",
+    "stack_batches",
 ]

@@ -1,0 +1,28 @@
+"""PRJ006: multiprocessing hygiene (this file sits under a repro/
+directory, so it counts as library code)."""
+import multiprocessing as mp
+
+
+def bad(target, worker_proc, popen):
+    ctx = mp.get_context("fork")
+    p1 = mp.Process(target=target)  # expect[PRJ006]
+    p2 = ctx.Process(target=target, args=(1,))  # expect[PRJ006]
+    p1.start()
+    p2.start()
+    worker_proc.join()  # expect[PRJ006]
+    popen.wait()  # expect[PRJ006]
+    return p1, p2
+
+
+def good(target, worker_proc, popen, t, lock, cond):
+    ctx = mp.get_context("fork")
+    p1 = mp.Process(target=target, daemon=True)
+    p2 = ctx.Process(target=target, daemon=False)  # explicit is fine too
+    p1.start()
+    p2.start()
+    worker_proc.join(timeout=2.0)
+    popen.wait(timeout=5.0)
+    t.join()  # thread handle: dies with the interpreter, out of scope
+    with lock:
+        cond.wait()  # condition variable, not a process handle
+    return p1, p2
