@@ -97,7 +97,7 @@ class Rule:
 
     id: str = "GLINT000"
     name: str = "base-rule"
-    family: str = "engine"  # determinism | jax | project
+    family: str = "engine"  # determinism | jax | kernels | project
     rationale: str = ""
 
     def check(self, ctx: "FileContext") -> Iterable[Finding]:

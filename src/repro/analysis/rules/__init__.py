@@ -1,2 +1,2 @@
 """Rule modules; importing this package registers every rule in ``RULES``."""
-from repro.analysis.rules import determinism, jax_hygiene, project  # noqa: F401
+from repro.analysis.rules import determinism, jax_hygiene, kernels, project  # noqa: F401

@@ -1,0 +1,117 @@
+"""Kernel-hygiene rules (KRN0xx).
+
+The Pallas kernels are the one place the repo's numerics are hand-written
+instead of derived from jnp, so each one carries two obligations the rest
+of the test suite depends on: an ``interpret`` parameter plumbed into the
+``pl.pallas_call`` (so the CPU CI boxes and the property tests can run the
+exact kernel body without TPU lowering), and a same-named ``*_ref`` jnp
+oracle exported from ``repro.kernels.ref`` (so allclose checks have a
+ground truth).  KRN001 machine-checks both.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import FileContext, Rule, register_rule
+
+__all__ = ["PallasKernelHygiene"]
+
+
+def _is_pallas_call(call: ast.Call) -> bool:
+    fn = call.func
+    leaf = fn.attr if isinstance(fn, ast.Attribute) else (
+        fn.id if isinstance(fn, ast.Name) else None
+    )
+    return leaf == "pallas_call"
+
+
+def _has_param(fn: ast.AST, name: str) -> bool:
+    args = fn.args
+    every = (
+        list(args.posonlyargs) + list(args.args) + list(args.kwonlyargs)
+    )
+    return any(a.arg == name for a in every)
+
+
+@register_rule
+class PallasKernelHygiene(Rule):
+    id = "KRN001"
+    name = "pallas-kernel-hygiene"
+    family = "kernels"
+    rationale = (
+        "every pl.pallas_call must plumb an `interpret` parameter from its "
+        "enclosing function (hardcoding it strands CPU CI and the property "
+        "tests on one execution mode), and every public *_pallas wrapper "
+        "must have a same-named *_ref jnp oracle exported from "
+        "repro.kernels.ref — a kernel without an oracle is hand-written "
+        "numerics nothing can allclose against.  Resolved against the "
+        "*live* ref module, like PRJ003 resolves live registries."
+    )
+
+    def _ref_module(self):
+        try:
+            from repro.kernels import ref
+        except ImportError:
+            return None  # analyzing a foreign tree: nothing to resolve
+        return ref
+
+    def check(self, ctx: FileContext):
+        if not ctx.is_library:
+            return
+        calls = [c for c in ctx.calls() if _is_pallas_call(c)]
+        if not calls:
+            return
+        ref = self._ref_module()
+        for call in calls:
+            yield from self._check_interpret(ctx, call)
+        if ref is None:
+            return
+        for node in ctx.tree.body:
+            if not isinstance(node, ast.FunctionDef):
+                continue
+            if not node.name.endswith("_pallas") or node.name.startswith("_"):
+                continue
+            oracle = node.name[: -len("_pallas")] + "_ref"
+            if not hasattr(ref, oracle):
+                yield self.finding(
+                    ctx,
+                    node,
+                    f"{node.name} has no oracle: export {oracle} from "
+                    "repro.kernels.ref so property tests can allclose "
+                    "the kernel against a jnp ground truth",
+                )
+
+    def _check_interpret(self, ctx: FileContext, call: ast.Call):
+        fn = ctx.enclosing_function(call)
+        if fn is None:
+            yield self.finding(
+                ctx,
+                call,
+                "pl.pallas_call at module scope cannot plumb interpret=; "
+                "wrap it in a function taking an `interpret` parameter",
+            )
+            return
+        kw = next((k for k in call.keywords if k.arg == "interpret"), None)
+        if kw is None:
+            yield self.finding(
+                ctx,
+                call,
+                "pl.pallas_call without interpret=; plumb the enclosing "
+                "function's `interpret` parameter through so CPU CI can "
+                "run the kernel body in interpret mode",
+            )
+        elif isinstance(kw.value, ast.Constant):
+            yield self.finding(
+                ctx,
+                call,
+                "pl.pallas_call hardcodes interpret=; pass the enclosing "
+                "function's `interpret` parameter instead of a constant",
+            )
+        elif not _has_param(fn, "interpret"):
+            yield self.finding(
+                ctx,
+                call,
+                f"{fn.name} passes interpret= but takes no `interpret` "
+                "parameter; callers must be able to choose the execution "
+                "mode per call",
+            )

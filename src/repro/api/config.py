@@ -93,6 +93,13 @@ class GLISPConfig:
     # batch with more edges than the last bucket falls back to
     # power-of-two padding (extra compile) rather than failing
     infer_edge_buckets: tuple = ()
+    # sweep kernel block sizes per (op, shape-bucket, dtype) before each
+    # bucket's first jit trace (repro.kernels.autotune); only meaningful
+    # with infer_use_kernel=True
+    kernel_autotune: bool = False
+    # directory for the tuner's content-addressed JSON artifact; None keeps
+    # tuned configs in-process only (re-measured per process)
+    kernel_cache_dir: str | None = None
 
     # -- fault tolerance -----------------------------------------------------
     # chaos schedule injected into the sampling servers + storage tiers;
@@ -274,6 +281,18 @@ class GLISPConfig:
             raise ValueError(
                 "serve_deadline_ms must be positive or None, got "
                 f"{self.serve_deadline_ms}"
+            )
+        if self.kernel_cache_dir is not None and (
+            not isinstance(self.kernel_cache_dir, str) or not self.kernel_cache_dir
+        ):
+            raise ValueError(
+                "kernel_cache_dir must be None or a non-empty path, got "
+                f"{self.kernel_cache_dir!r}"
+            )
+        if self.kernel_autotune and self.infer_use_kernel is not True:
+            raise ValueError(
+                "kernel_autotune=True requires infer_use_kernel=True (tuned "
+                "block sizes only apply to the Pallas kernel path)"
             )
         if self.infer_mode not in ("bucketed", "reference"):
             raise ValueError(

@@ -384,13 +384,17 @@ class GLISPSystem:
         mode: str | None = None,
         jit: bool | None = None,
         use_kernel: bool | None = None,
+        kernel_autotune: bool | None = None,
+        kernel_cache_dir: str | None = None,
         edge_buckets: tuple | None = None,
     ):
         """Run the redundancy-free layerwise engine over the whole graph.
 
         ``mode``/``jit``/``use_kernel``/``edge_buckets`` control the
         device-resident bucketed execution path (see ``GLISPConfig``'s
-        ``infer_*`` fields for the defaults).
+        ``infer_*`` fields for the defaults); ``kernel_autotune``/
+        ``kernel_cache_dir`` sweep Pallas block sizes per shape bucket
+        before its first compile (``repro.kernels.autotune``).
 
         Repeat calls with the same resolved parameters (and the *same*
         ``layer_fns``/``feats`` objects) reuse one engine, so jitted
@@ -440,6 +444,16 @@ class GLISPSystem:
             use_kernel=(
                 use_kernel if use_kernel is not None else cfg.infer_use_kernel
             ),
+            kernel_autotune=(
+                kernel_autotune
+                if kernel_autotune is not None
+                else cfg.kernel_autotune
+            ),
+            kernel_cache_dir=(
+                kernel_cache_dir
+                if kernel_cache_dir is not None
+                else cfg.kernel_cache_dir
+            ),
             edge_buckets=(
                 tuple(edge_buckets)
                 if edge_buckets is not None
@@ -475,6 +489,8 @@ class GLISPSystem:
             mode=resolved["mode"],
             use_jit=resolved["jit"],
             use_kernel=resolved["use_kernel"],
+            kernel_autotune=resolved["kernel_autotune"],
+            kernel_cache_dir=resolved["kernel_cache_dir"],
             edge_buckets=resolved["edge_buckets"],
             ticket_timeout=cfg.ticket_timeout,
             retry_policy=cfg.retry_policy,

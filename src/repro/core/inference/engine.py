@@ -132,6 +132,33 @@ class LayerStats:
     tiers: list = field(default_factory=list)
     vertices_computed: int = 0
     edges_aggregated: int = 0
+    # padding-waste accounting, mirroring ServeStats occupancy: real vs
+    # power-of-two-padded rows the bucketed slices actually dispatched,
+    # and per (vertex-bucket, edge-bucket) batch counts.  This is what the
+    # ragged kernels' tile skip saves — visible per layer in reports.
+    batch_rows: int = 0
+    padded_rows: int = 0
+    batch_edges: int = 0
+    padded_edges: int = 0
+    bucket_batches: dict = field(default_factory=dict)
+
+    def note_batch(
+        self, rows: int, padded_rows: int, edges: int, padded_edges: int
+    ) -> None:
+        self.batch_rows += rows
+        self.padded_rows += padded_rows
+        self.batch_edges += edges
+        self.padded_edges += padded_edges
+        self.bucket_batches[(padded_rows, padded_edges)] = (
+            self.bucket_batches.get((padded_rows, padded_edges), 0) + 1
+        )
+
+    def occupancy(self) -> float:
+        """Fraction of padded vertex rows that carried real vertices."""
+        return self.batch_rows / self.padded_rows if self.padded_rows else 0.0
+
+    def edge_occupancy(self) -> float:
+        return self.batch_edges / self.padded_edges if self.padded_edges else 0.0
 
     def absorb(self, hs: HybridStats) -> None:
         """Fold one partition cache's counters into this layer's totals."""
@@ -216,6 +243,8 @@ class LayerwiseInferenceEngine:
         mode: str = "bucketed",
         use_jit: bool = True,
         use_kernel: bool | None = None,
+        kernel_autotune: bool = False,
+        kernel_cache_dir: str | None = None,
         edge_buckets: tuple | None = None,
         ticket_timeout: float | None = None,
         retry_policy=None,  # RetryPolicy for tiered-storage reads
@@ -242,6 +271,8 @@ class LayerwiseInferenceEngine:
         self.mode = mode
         self.use_jit = use_jit
         self.use_kernel = use_kernel
+        self.kernel_autotune = kernel_autotune
+        self.kernel_cache_dir = kernel_cache_dir
         self.edge_buckets = tuple(edge_buckets) if edge_buckets else ()
         self.ticket_timeout = ticket_timeout
         self.retry_policy = retry_policy
@@ -453,7 +484,7 @@ class LayerwiseInferenceEngine:
                     )
                     if slice_fn is not None:
                         h_new = self._run_slice(
-                            k, slice_fn, h_self, h_nbr, seg, et, result
+                            k, slice_fn, h_self, h_nbr, seg, et, result, stats
                         )
                     elif needs_etype:
                         h_new = np.asarray(
@@ -493,7 +524,7 @@ class LayerwiseInferenceEngine:
         return np.asarray(layer_fn(k, h_self, h_nbr, seg))
 
     # -- bucketed device execution --------------------------------------
-    def _run_slice(self, k, slice_fn, h_self, h_nbr, seg, et, result):
+    def _run_slice(self, k, slice_fn, h_self, h_nbr, seg, et, result, stats=None):
         """Pad one batch to its (vertex, edge) shape bucket and run the
         jit-compiled slice: one host→device transfer in, one device→host
         readback out.  Shapes repeat across batches, so each (layer, bucket)
@@ -501,10 +532,29 @@ class LayerwiseInferenceEngine:
         b, e = h_self.shape[0], seg.shape[0]
         bp, ep = self._vertex_bucket(b), self._edge_bucket(e)
         key = (k, bp, ep)
+        if (
+            self.kernel_autotune
+            and self.use_kernel
+            and key not in self._shapes_lifetime
+        ):
+            # tune this bucket's kernel shapes BEFORE the first jit trace,
+            # so the trace-time block-size lookup sees the tuned winners
+            # (the jit cache then pins them — still one compile per bucket)
+            shapes_of = getattr(self.layer_fns[k], "kernel_shapes", None)
+            if shapes_of is not None:
+                from repro.kernels.autotune import autotune_for_slice
+
+                autotune_for_slice(
+                    shapes_of(ep, bp, h_nbr.shape[1]),
+                    h_nbr.dtype,
+                    cache_dir=self.kernel_cache_dir,
+                )
         if key not in self._shapes_seen:
             self._shapes_seen.add(key)
             result.slice_compiles += 1
         self._shapes_lifetime.add(key)
+        if stats is not None:
+            stats.note_batch(b, bp, e, ep)
         hs = np.zeros((bp, h_self.shape[1]), h_self.dtype)
         hs[:b] = h_self
         hn = np.zeros((ep, h_nbr.shape[1]), h_nbr.dtype)

@@ -1,5 +1,27 @@
 # Pallas TPU kernels for the compute hot-spots (validated interpret=True on
-# CPU): segment_spmm (GNN aggregation), flash_attention, ssd_scan (Mamba-2).
-from repro.kernels.ops import INTERPRET, gnn_aggregate, mha_attention, ssd_scan
+# CPU): segment_spmm (GNN aggregation) plus its fused/ragged variants in
+# fused_gnn.py, flash_attention, ssd_scan (Mamba-2).  Block sizes resolve
+# through the deterministic autotuner in autotune.py.
+from repro.kernels.autotune import DEFAULT_CONFIG, KernelConfig, get_tuned
+from repro.kernels.ops import (
+    INTERPRET,
+    gnn_aggregate,
+    gnn_gat_aggregate,
+    gnn_gather_aggregate,
+    gnn_segment_max,
+    mha_attention,
+    ssd_scan,
+)
 
-__all__ = ["INTERPRET", "gnn_aggregate", "mha_attention", "ssd_scan"]
+__all__ = [
+    "INTERPRET",
+    "gnn_aggregate",
+    "gnn_gather_aggregate",
+    "gnn_gat_aggregate",
+    "gnn_segment_max",
+    "mha_attention",
+    "ssd_scan",
+    "KernelConfig",
+    "DEFAULT_CONFIG",
+    "get_tuned",
+]

@@ -1,0 +1,374 @@
+"""Fused ragged Pallas kernels for the GNN hot path.
+
+The bucketed inference engine and the training apply() path both reduce to
+the same three dispatches per layer: gather neighbor rows, segment-sum them
+into destination rows, normalize/activate.  ``segment_spmm.py`` already
+turns the scatter into a block-tiled one-hot matmul; this module removes
+the remaining HBM round trips and padding waste (ROADMAP item 1):
+
+* :func:`gather_spmm_pallas` — fused gather+segment-SpMM.  Takes the
+  feature matrix and per-edge row indices and gathers *inside* the edge
+  tile, so the ``[E, D]`` message array is never materialized in HBM.
+* :func:`gather_spmm_ragged_pallas` / :func:`segment_spmm_ragged_pallas` —
+  masked/ragged variants driven by per-tile valid-edge counts.  Power-of-two
+  bucket padding then costs one ``pl.when`` predicate per tile instead of
+  MXU work (an all-padding tile is skipped entirely).
+* :func:`gat_softmax_aggregate_pallas` — one-pass GAT edge-softmax +
+  weighted aggregate (segment-max, exp, normalize, weighted segment-sum in
+  a single kernel), replacing the 3-pass ``_seg_softmax`` + ``_seg_sum``
+  sequence in ``models/gnn/models.py``.  Uses the flash-attention online
+  rescaling trick (running max / denominator / accumulator as revisited
+  output blocks) so segments can span edge tiles.
+* :func:`segment_max_pallas` — standalone segment-max so ``_seg_softmax``'s
+  max step can honor ``use_kernel`` too.
+
+All kernels run on a 1-D grid over edge tiles with the full output array as
+a revisited block: the gather happens once per edge tile (never once per
+(row-tile, edge-tile) pair), which is also what makes the fused path beat
+gather→``segment_spmm_pallas`` on wall-clock.  ``seg == -1`` / ``idx == -1``
+mark padding.  Every kernel has a same-named ``*_ref`` oracle in ``ref.py``
+(glint rule KRN001 enforces this) and plumbs ``interpret`` through.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+__all__ = [
+    "gather_spmm_pallas",
+    "gather_spmm_ragged_pallas",
+    "segment_spmm_ragged_pallas",
+    "gat_softmax_aggregate_pallas",
+    "segment_max_pallas",
+]
+
+# finite stand-in for -inf: exp(_NEG_INF - m) underflows to 0.0 and
+# _NEG_INF - _NEG_INF == 0 (a true -inf would produce NaN there)
+_NEG_INF = -1e30
+
+
+def _pad_edges(arrs, m: int, block_edges: int, fills):
+    """Pad every 1-D/2-D edge-indexed array up to a whole number of tiles
+    (at least one, so the eb==0 init always runs even for m == 0)."""
+    m_pad = -(-max(m, 1) // block_edges) * block_edges
+    if m_pad == m:
+        return arrs, m_pad
+    out = []
+    for a, fill in zip(arrs, fills):
+        pad = ((0, m_pad - m),) + ((0, 0),) * (a.ndim - 1)
+        out.append(jnp.pad(a, pad, constant_values=fill))
+    return out, m_pad
+
+
+def _onehot(seg, valid, n):
+    """[BM, n] one-hot membership matrix (bool), padding rows all-zero."""
+    rows = jax.lax.iota(jnp.int32, n)
+    return (seg[:, None] == rows[None, :]) & valid[:, None]
+
+
+# -- fused gather + segment-SpMM --------------------------------------------
+
+
+def _gather_accumulate(idx_ref, seg_ref, feats_ref, out_ref):
+    idx = idx_ref[...]  # [BM] int32 rows into feats (-1 = padding)
+    seg = seg_ref[...]  # [BM] int32 destination segments (-1 = padding)
+    feats = feats_ref[...]  # [F, D] resident feature block
+    msg = jnp.take(feats, jnp.maximum(idx, 0), axis=0)  # [BM, D] in VMEM only
+    ok = (idx >= 0) & (seg >= 0)
+    onehot = _onehot(seg, ok, out_ref.shape[0]).astype(msg.dtype)
+    out_ref[...] += jax.lax.dot_general(
+        onehot,
+        msg,
+        dimension_numbers=(((0,), (0,)), ((), ())),  # onehot^T @ msg
+        preferred_element_type=out_ref.dtype,
+    )
+
+
+def _gather_kernel(idx_ref, seg_ref, feats_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    _gather_accumulate(idx_ref, seg_ref, feats_ref, out_ref)
+
+
+def _gather_ragged_kernel(cnt_ref, idx_ref, seg_ref, feats_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(cnt_ref[0] > 0)  # all-padding tiles cost one predicate
+    def _compute():
+        _gather_accumulate(idx_ref, seg_ref, feats_ref, out_ref)
+
+
+def _gather_call(kernel, inputs, specs, grid, n, d, dtype, interpret):
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=specs,
+        out_specs=pl.BlockSpec((n, d), lambda eb: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, d), dtype),
+        interpret=interpret,
+    )(*inputs)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_edges", "interpret")
+)
+def gather_spmm_pallas(
+    feats: jax.Array,
+    idx: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    block_edges: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """out[s] = sum over edges e with seg[e] == s of feats[idx[e]].
+
+    feats: [F, D]; idx, seg: [E] int32 with -1 padding.  The gather runs
+    inside the edge tile — no [E, D] message array is ever materialized."""
+    m = idx.shape[0]
+    f, d = feats.shape
+    (idx, seg), m_pad = _pad_edges(
+        [idx.astype(jnp.int32), seg.astype(jnp.int32)], m, block_edges, [-1, -1]
+    )
+    return _gather_call(
+        _gather_kernel,
+        (idx, seg, feats),
+        [
+            pl.BlockSpec((block_edges,), lambda eb: (eb,)),
+            pl.BlockSpec((block_edges,), lambda eb: (eb,)),
+            pl.BlockSpec((f, d), lambda eb: (0, 0)),
+        ],
+        (m_pad // block_edges,),
+        num_segments,
+        d,
+        feats.dtype,
+        interpret,
+    )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_edges", "interpret")
+)
+def gather_spmm_ragged_pallas(
+    feats: jax.Array,
+    idx: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    block_edges: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Ragged :func:`gather_spmm_pallas`: per-tile valid-edge counts are
+    computed host-side-of-the-kernel and tiles with zero valid edges skip
+    the gather+matmul entirely (bucket padding costs mask work, not MXU
+    work).  Same semantics as the dense variant."""
+    m = idx.shape[0]
+    f, d = feats.shape
+    (idx, seg), m_pad = _pad_edges(
+        [idx.astype(jnp.int32), seg.astype(jnp.int32)], m, block_edges, [-1, -1]
+    )
+    valid = (idx >= 0) & (seg >= 0)
+    counts = jnp.sum(valid.reshape(-1, block_edges), axis=1).astype(jnp.int32)
+    return _gather_call(
+        _gather_ragged_kernel,
+        (counts, idx, seg, feats),
+        [
+            pl.BlockSpec((1,), lambda eb: (eb,)),
+            pl.BlockSpec((block_edges,), lambda eb: (eb,)),
+            pl.BlockSpec((block_edges,), lambda eb: (eb,)),
+            pl.BlockSpec((f, d), lambda eb: (0, 0)),
+        ],
+        (m_pad // block_edges,),
+        num_segments,
+        d,
+        feats.dtype,
+        interpret,
+    )
+
+
+# -- ragged segment-SpMM (pre-gathered messages) -----------------------------
+
+
+def _spmm_ragged_kernel(cnt_ref, seg_ref, msg_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    @pl.when(cnt_ref[0] > 0)
+    def _compute():
+        seg = seg_ref[...]
+        msg = msg_ref[...]
+        onehot = _onehot(seg, seg >= 0, out_ref.shape[0]).astype(msg.dtype)
+        out_ref[...] += jax.lax.dot_general(
+            onehot,
+            msg,
+            dimension_numbers=(((0,), (0,)), ((), ())),
+            preferred_element_type=out_ref.dtype,
+        )
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_edges", "interpret")
+)
+def segment_spmm_ragged_pallas(
+    msg: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    block_edges: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Ragged drop-in for :func:`segment_spmm_pallas` on a 1-D edge grid:
+    the full output is a revisited block and all-padding edge tiles are
+    skipped via per-tile valid counts — the engine's power-of-two bucket
+    padding stops costing matmuls."""
+    m, d = msg.shape
+    (msg, seg), m_pad = _pad_edges(
+        [msg, seg.astype(jnp.int32)], m, block_edges, [0, -1]
+    )
+    counts = jnp.sum((seg >= 0).reshape(-1, block_edges), axis=1).astype(jnp.int32)
+    return pl.pallas_call(
+        _spmm_ragged_kernel,
+        grid=(m_pad // block_edges,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda eb: (eb,)),
+            pl.BlockSpec((block_edges,), lambda eb: (eb,)),
+            pl.BlockSpec((block_edges, d), lambda eb: (eb, 0)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, d), lambda eb: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, d), msg.dtype),
+        interpret=interpret,
+    )(counts, seg, msg)
+
+
+# -- one-pass GAT edge-softmax + aggregate -----------------------------------
+
+
+def _gat_kernel(seg_ref, logit_ref, msg_ref, acc_ref, m_ref, z_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        z_ref[...] = jnp.zeros_like(z_ref)
+
+    seg = seg_ref[...]
+    logit = logit_ref[...].astype(jnp.float32)  # [BM]
+    msg = msg_ref[...].astype(jnp.float32)  # [BM, D]
+    member = _onehot(seg, seg >= 0, acc_ref.shape[0])  # [BM, n] bool
+    tile_max = jnp.max(jnp.where(member, logit[:, None], _NEG_INF), axis=0)
+    m_prev = m_ref[...][:, 0]
+    m_new = jnp.maximum(m_prev, tile_max)
+    # online-softmax rescale of the running sums (exp(0)=1 while a segment
+    # is still empty; exp(-huge) underflows to 0 once a real max arrives)
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(jnp.where(member, logit[:, None] - m_new[None, :], _NEG_INF))
+    z_ref[...] = (alpha * z_ref[...][:, 0] + jnp.sum(p, axis=0))[:, None]
+    acc_ref[...] = alpha[:, None] * acc_ref[...] + jax.lax.dot_general(
+        p,
+        msg,
+        dimension_numbers=(((0,), (0,)), ((), ())),  # p^T @ msg
+        preferred_element_type=jnp.float32,
+    )
+    m_ref[...] = m_new[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_edges", "interpret")
+)
+def gat_softmax_aggregate_pallas(
+    logits: jax.Array,
+    msg: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    block_edges: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """out[s] = sum_e softmax_{seg==s}(logits)[e] * msg[e] in ONE kernel.
+
+    Replaces the 3-pass segment-max → exp/normalize → segment-sum sequence:
+    running (max, denominator, accumulator) live in revisited output blocks
+    and are rescaled flash-attention-style as edge tiles stream through.
+    Matches ``alpha = e / max(z, 1e-9)`` from ``_seg_softmax`` exactly, so
+    empty segments return 0."""
+    m = seg.shape[0]
+    d = msg.shape[1]
+    n = num_segments
+    (seg, logits, msg), m_pad = _pad_edges(
+        [seg.astype(jnp.int32), logits, msg], m, block_edges, [-1, 0, 0]
+    )
+    acc, _, z = pl.pallas_call(
+        _gat_kernel,
+        grid=(m_pad // block_edges,),
+        in_specs=[
+            pl.BlockSpec((block_edges,), lambda eb: (eb,)),
+            pl.BlockSpec((block_edges,), lambda eb: (eb,)),
+            pl.BlockSpec((block_edges, d), lambda eb: (eb, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((n, d), lambda eb: (0, 0)),
+            pl.BlockSpec((n, 1), lambda eb: (0, 0)),
+            pl.BlockSpec((n, 1), lambda eb: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n, d), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+            jax.ShapeDtypeStruct((n, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(seg, logits, msg)
+    return (acc / jnp.maximum(z, 1e-9)).astype(msg.dtype)
+
+
+# -- segment max -------------------------------------------------------------
+
+
+def _segmax_kernel(seg_ref, x_ref, out_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        out_ref[...] = jnp.full_like(out_ref, _NEG_INF)
+
+    seg = seg_ref[...]
+    x = x_ref[...].astype(jnp.float32)
+    member = _onehot(seg, seg >= 0, out_ref.shape[0])
+    tile_max = jnp.max(jnp.where(member, x[:, None], _NEG_INF), axis=0)
+    out_ref[...] = jnp.maximum(out_ref[...], tile_max[:, None])
+
+
+@functools.partial(
+    jax.jit, static_argnames=("num_segments", "block_edges", "interpret")
+)
+def segment_max_pallas(
+    x: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    block_edges: int = 128,
+    interpret: bool = True,
+) -> jax.Array:
+    """Per-segment max of x over seg (padding seg=-1 excluded); empty
+    segments yield 0.0, matching ``_seg_softmax``'s finite-fix."""
+    m = seg.shape[0]
+    (seg, x), m_pad = _pad_edges(
+        [seg.astype(jnp.int32), x], m, block_edges, [-1, 0]
+    )
+    out = pl.pallas_call(
+        _segmax_kernel,
+        grid=(m_pad // block_edges,),
+        in_specs=[
+            pl.BlockSpec((block_edges,), lambda eb: (eb,)),
+            pl.BlockSpec((block_edges,), lambda eb: (eb,)),
+        ],
+        out_specs=pl.BlockSpec((num_segments, 1), lambda eb: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((num_segments, 1), jnp.float32),
+        interpret=interpret,
+    )(seg, x)
+    mx = out[:, 0]
+    return jnp.where(mx > _NEG_INF * 0.5, mx, 0.0).astype(x.dtype)

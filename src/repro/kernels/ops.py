@@ -12,8 +12,23 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.kernels.autotune import DEFAULT_CONFIG, get_tuned
 from repro.kernels.flash_attention import flash_attention_pallas
-from repro.kernels.ref import attention_ref, segment_spmm_ref, ssd_scan_ref
+from repro.kernels.fused_gnn import (
+    gat_softmax_aggregate_pallas,
+    gather_spmm_pallas,
+    gather_spmm_ragged_pallas,
+    segment_max_pallas,
+    segment_spmm_ragged_pallas,
+)
+from repro.kernels.ref import (
+    attention_ref,
+    gat_softmax_aggregate_ref,
+    gather_spmm_ref,
+    segment_max_ref,
+    segment_spmm_ref,
+    ssd_scan_ref,
+)
 from repro.kernels.segment_spmm import segment_spmm_pallas
 from repro.kernels.ssd_scan import ssd_scan_pallas
 
@@ -22,15 +37,35 @@ INTERPRET = os.environ.get("REPRO_PALLAS_INTERPRET", "1") != "0"
 __all__ = [
     "INTERPRET",
     "gnn_aggregate",
+    "gnn_gather_aggregate",
+    "gnn_gat_aggregate",
+    "gnn_segment_max",
     "mha_attention",
     "ssd_scan",
     "segment_spmm_pallas",
+    "segment_spmm_ragged_pallas",
+    "gather_spmm_pallas",
+    "gather_spmm_ragged_pallas",
+    "gat_softmax_aggregate_pallas",
+    "segment_max_pallas",
     "flash_attention_pallas",
     "ssd_scan_pallas",
     "attention_ref",
     "segment_spmm_ref",
+    "gather_spmm_ref",
+    "gat_softmax_aggregate_ref",
+    "segment_max_ref",
     "ssd_scan_ref",
 ]
+
+
+def _blocks(op, shape, dtype, block_rows, block_edges):
+    """Resolve block sizes: explicit caller args win, then the autotuner's
+    table for this (op, shape-bucket, dtype), then DEFAULT_CONFIG.  Runs at
+    trace time (block sizes are static jit args), so a bucket tuned before
+    its first trace bakes its winner into the compiled slice."""
+    cfg = get_tuned(op, shape, dtype) or DEFAULT_CONFIG
+    return (block_rows or cfg.block_rows, block_edges or cfg.block_edges)
 
 
 def gnn_aggregate(
@@ -39,20 +74,84 @@ def gnn_aggregate(
     num_segments: int,
     *,
     use_kernel: bool = True,
-    block_rows: int = 128,
-    block_edges: int = 128,
+    block_rows: int | None = None,
+    block_edges: int | None = None,
+    ragged: bool = True,
 ) -> jax.Array:
-    """Segment-sum of gathered neighbor messages (GNN aggregation hotspot)."""
-    if use_kernel:
-        return segment_spmm_pallas(
-            msg,
-            seg,
-            num_segments,
-            block_rows=block_rows,
-            block_edges=block_edges,
-            interpret=INTERPRET,
+    """Segment-sum of gathered neighbor messages (GNN aggregation hotspot).
+
+    ``ragged=True`` (default) routes to the tile-skipping kernel so the
+    engine's power-of-two bucket padding costs mask work, not MXU work."""
+    if not use_kernel:
+        return segment_spmm_ref(msg, seg, num_segments)
+    shape = (msg.shape[0], num_segments, msg.shape[1])
+    if ragged:
+        _, be = _blocks("segment_spmm_ragged", shape, msg.dtype, None, block_edges)
+        return segment_spmm_ragged_pallas(
+            msg, seg, num_segments, block_edges=be, interpret=INTERPRET
         )
-    return segment_spmm_ref(msg, seg, num_segments)
+    br, be = _blocks("segment_spmm", shape, msg.dtype, block_rows, block_edges)
+    return segment_spmm_pallas(
+        msg, seg, num_segments, block_rows=br, block_edges=be, interpret=INTERPRET
+    )
+
+
+def gnn_gather_aggregate(
+    feats: jax.Array,
+    idx: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    use_kernel: bool = True,
+    block_edges: int | None = None,
+    ragged: bool = True,
+) -> jax.Array:
+    """Fused gather+aggregate: out[s] = sum_{seg[e]==s} feats[idx[e]],
+    without materializing the [E, D] message array."""
+    if not use_kernel:
+        return gather_spmm_ref(feats, idx, seg, num_segments)
+    shape = (idx.shape[0], num_segments, feats.shape[1])
+    op = "gather_spmm_ragged" if ragged else "gather_spmm"
+    _, be = _blocks(op, shape, feats.dtype, None, block_edges)
+    fn = gather_spmm_ragged_pallas if ragged else gather_spmm_pallas
+    return fn(feats, idx, seg, num_segments, block_edges=be, interpret=INTERPRET)
+
+
+def gnn_gat_aggregate(
+    logits: jax.Array,
+    msg: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    use_kernel: bool = True,
+    block_edges: int | None = None,
+) -> jax.Array:
+    """One-pass edge-softmax + weighted aggregate (GAT/HGT inner loop)."""
+    if not use_kernel:
+        return gat_softmax_aggregate_ref(logits, msg, seg, num_segments)
+    shape = (seg.shape[0], num_segments, msg.shape[1])
+    _, be = _blocks("gat_softmax_aggregate", shape, msg.dtype, None, block_edges)
+    return gat_softmax_aggregate_pallas(
+        logits, msg, seg, num_segments, block_edges=be, interpret=INTERPRET
+    )
+
+
+def gnn_segment_max(
+    x: jax.Array,
+    seg: jax.Array,
+    num_segments: int,
+    *,
+    use_kernel: bool = True,
+    block_edges: int | None = None,
+) -> jax.Array:
+    """Per-segment max with seg=-1 padding excluded; empty segments -> 0."""
+    if not use_kernel:
+        return segment_max_ref(x, seg, num_segments)
+    shape = (seg.shape[0], num_segments, 1)
+    _, be = _blocks("segment_max", shape, x.dtype, None, block_edges)
+    return segment_max_pallas(
+        x, seg, num_segments, block_edges=be, interpret=INTERPRET
+    )
 
 
 def mha_attention(

@@ -4,7 +4,17 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-__all__ = ["segment_spmm_ref", "attention_ref", "ssd_scan_ref"]
+__all__ = [
+    "segment_spmm_ref",
+    "segment_spmm_ragged_ref",
+    "gather_spmm_ref",
+    "gather_spmm_ragged_ref",
+    "gat_softmax_aggregate_ref",
+    "segment_max_ref",
+    "attention_ref",
+    "flash_attention_ref",
+    "ssd_scan_ref",
+]
 
 
 def segment_spmm_ref(msg: jax.Array, seg: jax.Array, num_segments: int) -> jax.Array:
@@ -13,6 +23,59 @@ def segment_spmm_ref(msg: jax.Array, seg: jax.Array, num_segments: int) -> jax.A
     return jax.ops.segment_sum(
         msg * valid, jnp.maximum(seg, 0), num_segments=num_segments
     )
+
+
+def segment_spmm_ragged_ref(
+    msg: jax.Array, seg: jax.Array, num_segments: int
+) -> jax.Array:
+    """The ragged kernel skips all-padding tiles, which contribute zero —
+    semantics are identical to the dense segment-SpMM."""
+    return segment_spmm_ref(msg, seg, num_segments)
+
+
+def gather_spmm_ref(
+    feats: jax.Array, idx: jax.Array, seg: jax.Array, num_segments: int
+) -> jax.Array:
+    """out[s] = sum_{e: seg[e]==s} feats[idx[e]]; edges with idx or seg
+    equal to -1 are dropped (the fused kernel's padding convention)."""
+    ok = (idx >= 0) & (seg >= 0)
+    msg = jnp.where(ok[:, None], feats[jnp.maximum(idx, 0)], 0)
+    return jax.ops.segment_sum(
+        msg, jnp.maximum(seg, 0), num_segments=num_segments
+    )
+
+
+def gather_spmm_ragged_ref(
+    feats: jax.Array, idx: jax.Array, seg: jax.Array, num_segments: int
+) -> jax.Array:
+    """Ragged tile-skipping changes nothing semantically."""
+    return gather_spmm_ref(feats, idx, seg, num_segments)
+
+
+def segment_max_ref(x: jax.Array, seg: jax.Array, num_segments: int) -> jax.Array:
+    """Per-segment max (padding seg=-1 excluded); empty segments yield 0.0,
+    matching the models' ``_seg_softmax`` finite-fix."""
+    neg = jnp.where(seg >= 0, x, -jnp.inf)
+    mx = jax.ops.segment_max(neg, jnp.maximum(seg, 0), num_segments=num_segments)
+    return jnp.where(jnp.isfinite(mx), mx, 0.0).astype(x.dtype)
+
+
+def gat_softmax_aggregate_ref(
+    logits: jax.Array, msg: jax.Array, seg: jax.Array, num_segments: int
+) -> jax.Array:
+    """3-pass oracle for the one-pass kernel: segment-max, exp/normalize
+    with the ``max(z, 1e-9)`` guard from ``_seg_softmax``, weighted
+    segment-sum.  Empty segments return 0."""
+    ok = seg >= 0
+    seg0 = jnp.maximum(seg, 0)
+    mx = segment_max_ref(logits.astype(jnp.float32), seg, num_segments)
+    e = jnp.where(ok, jnp.exp(logits.astype(jnp.float32) - mx[seg0]), 0.0)
+    z = jax.ops.segment_sum(e, seg0, num_segments=num_segments)
+    alpha = e / jnp.maximum(z[seg0], 1e-9)
+    weighted = jnp.where(ok[:, None], msg.astype(jnp.float32), 0.0) * alpha[:, None]
+    return jax.ops.segment_sum(
+        weighted, seg0, num_segments=num_segments
+    ).astype(msg.dtype)
 
 
 def attention_ref(
@@ -38,6 +101,11 @@ def attention_ref(
     s = jnp.where(mask, s, -1e30)
     p = jax.nn.softmax(s, axis=-1)
     return (p @ v.astype(jnp.float32)).astype(q.dtype)
+
+
+# KRN001 pairs every ``<base>_pallas`` kernel with a ``<base>_ref`` oracle;
+# the flash kernel's oracle predates that convention under its dense name.
+flash_attention_ref = attention_ref
 
 
 def ssd_scan_ref(

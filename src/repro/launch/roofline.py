@@ -25,7 +25,15 @@ from repro.launch.mesh import HW
 from repro.launch.specs import SHAPES
 from repro.models.transformer.config import ArchConfig
 
-__all__ = ["analytic_flops", "analytic_hbm_bytes", "parse_collectives", "roofline"]
+__all__ = [
+    "analytic_flops",
+    "analytic_hbm_bytes",
+    "parse_collectives",
+    "roofline",
+    "kernel_flops",
+    "kernel_hbm_bytes",
+    "kernel_roofline",
+]
 
 
 # ---------------------------------------------------------------------------
@@ -303,6 +311,125 @@ def parse_collectives(hlo_text: str) -> dict:
         entry = next(iter(comps), None)
     b, c = total(entry) if entry else ({k: 0 for k in _COLL_OPS},) * 2
     return {"bytes": b, "counts": c, "total_bytes": sum(b.values())}
+
+
+# ---------------------------------------------------------------------------
+# per-kernel analytic models (GNN Pallas suite; see repro.kernels.fused_gnn)
+# ---------------------------------------------------------------------------
+#
+# Shape dict keys: edges E (padded), segments N, dim D, and optionally
+# feat_rows F (gather ops, default N), valid_edges Ev (ragged ops, default
+# E; padding assumed to be a suffix as the engine lays it out), block_rows
+# BN / block_edges BM (default 128), dtype_bytes b (default 4).
+#
+# FLOPs count the one-hot contraction as a dense (BN×BM)·(BM×D) matmul per
+# tile — that IS what the MXU executes, so achieved-vs-peak is an honest
+# hardware fraction even though most one-hot entries are zero.  Bytes model
+# HBM traffic under the kernels' actual block residency:
+#   * segment_spmm (2-D grid) re-reads each edge tile once per ROW block;
+#   * the fused/ragged 1-D-grid kernels keep the output resident and read
+#     each edge tile once — and gather_spmm never materializes the [E, D]
+#     message array at all (that round trip is the fusion win);
+#   * ragged variants only touch the ~ceil(Ev/BM) non-empty tiles.
+
+
+def _kshape(shape: dict) -> tuple:
+    e = float(shape["edges"])
+    n = float(shape["segments"])
+    d = float(shape["dim"])
+    f = float(shape.get("feat_rows", n))
+    ev = float(shape.get("valid_edges", e))
+    bn = float(shape.get("block_rows", 128))
+    bm = float(shape.get("block_edges", 128))
+    b = float(shape.get("dtype_bytes", 4))
+    tiles = -(-e // bm)  # total edge tiles
+    active = min(tiles, -(-ev // bm)) if ev > 0 else 0.0  # non-empty tiles
+    return e, n, d, f, ev, bn, bm, b, tiles, active
+
+
+KERNEL_OPS = (
+    "segment_spmm",
+    "segment_spmm_ragged",
+    "gather_spmm",
+    "gather_spmm_ragged",
+    "gat_softmax_aggregate",
+    "segment_max",
+    "unfused_gather_spmm",  # gather -> segment_spmm sequence, for comparison
+)
+
+
+def kernel_flops(op: str, shape: dict) -> float:
+    e, n, d, f, ev, bn, bm, b, tiles, active = _kshape(shape)
+    matmul = 2.0 * n * d  # per edge row fed to the MXU
+    if op in ("segment_spmm", "gather_spmm", "unfused_gather_spmm"):
+        return e * matmul
+    if op in ("segment_spmm_ragged", "gather_spmm_ragged"):
+        return active * bm * matmul
+    if op == "gat_softmax_aggregate":
+        # matmul + membership/max/exp/rescale vector work per (edge, row)
+        return e * (matmul + 8.0 * n)
+    if op == "segment_max":
+        return 2.0 * e * n  # compare + select
+    raise ValueError(f"unknown kernel op {op!r}")
+
+
+def kernel_hbm_bytes(op: str, shape: dict) -> float:
+    e, n, d, f, ev, bn, bm, b, tiles, active = _kshape(shape)
+    row_blocks = -(-n // bn)
+    out = n * d * b
+    if op == "segment_spmm":
+        # each edge tile (msg + seg) re-read once per row block
+        return row_blocks * e * (d * b + 4) + out
+    if op == "segment_spmm_ragged":
+        return active * bm * (d * b + 4) + 4 * tiles + out
+    if op == "gather_spmm":
+        return f * d * b + e * 8 + out
+    if op == "gather_spmm_ragged":
+        return f * d * b + e * 8 + 4 * tiles + out
+    if op == "gat_softmax_aggregate":
+        return e * (d * b + b + 4) + n * (d + 2) * 4
+    if op == "segment_max":
+        return e * (b + 4) + n * 4
+    if op == "unfused_gather_spmm":
+        # gather: feats read + [E, D] msg write; spmm: msg+seg re-read per
+        # row block; out write.  The msg round trip is what fusion deletes.
+        return f * d * b + e * d * b + row_blocks * e * (d * b + 4) + out
+    raise ValueError(f"unknown kernel op {op!r}")
+
+
+def kernel_roofline(op: str, shape: dict, wall_s: float, dtype: str = "f32") -> dict:
+    """Achieved-vs-peak for one measured kernel wall-clock.
+
+    Peak FLOP/s follows the dtype (the MXU's f32 rate is half its bf16
+    rate); ``bound`` names the limiting resource at these shapes and
+    ``frac_of_*`` are the honest hardware fractions ``benchmarks/kernels.py``
+    reports.  In interpret mode wall-clock is Python-loop dominated, so the
+    fractions are only meaningful on a real TPU — the analytic terms and the
+    ``bound_s`` floor are hardware truths either way."""
+    fl = kernel_flops(op, shape)
+    by = kernel_hbm_bytes(op, shape)
+    peak = HW["peak_flops_bf16"] * (0.5 if dtype in ("f32", "float32") else 1.0)
+    compute_s = fl / peak
+    memory_s = by / HW["hbm_bw"]
+    bound_s = max(compute_s, memory_s)
+    achieved_flops = fl / wall_s if wall_s > 0 else 0.0
+    achieved_bw = by / wall_s if wall_s > 0 else 0.0
+    return {
+        "op": op,
+        "flops": fl,
+        "hbm_bytes": by,
+        "arithmetic_intensity": fl / by if by else 0.0,
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "bound_s": bound_s,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+        "wall_s": wall_s,
+        "achieved_flops_per_s": achieved_flops,
+        "frac_of_peak_flops": achieved_flops / peak if peak else 0.0,
+        "achieved_bytes_per_s": achieved_bw,
+        "frac_of_hbm_bw": achieved_bw / HW["hbm_bw"],
+        "frac_of_bound": bound_s / wall_s if wall_s > 0 else 0.0,
+    }
 
 
 # ---------------------------------------------------------------------------

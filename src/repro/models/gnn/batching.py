@@ -33,6 +33,10 @@ class GNNBatch:
     layer_dst: list
     layer_src: list
     layer_etype: list
+    # per layer k: [V, 1] float32 valid-edge in-degree per destination —
+    # static for the batch, so it's counted ONCE here (host-side bincount)
+    # instead of once per GCN/SAGE layer call; None = compute in-model
+    layer_cnt: list | None = None
 
     @property
     def num_vertices(self) -> int:
@@ -69,7 +73,7 @@ def subgraph_to_batch(
     )
 
     K = num_layers
-    layer_dst, layer_src, layer_et = [], [], []
+    layer_dst, layer_src, layer_et, layer_cnt = [], [], [], []
     for k in range(K):
         hops = sub.hops[: K - k]
         src = np.concatenate([h.src for h in hops]) if hops else np.zeros(0, np.int64)
@@ -94,6 +98,11 @@ def subgraph_to_batch(
         layer_dst.append(d_pos)
         layer_src.append(s_pos)
         layer_et.append(et)
+        layer_cnt.append(
+            np.bincount(d_pos[d_pos >= 0], minlength=vpad)
+            .astype(np.float32)
+            .reshape(vpad, 1)
+        )
     return GNNBatch(
         feats=table,
         valid=valid,
@@ -102,4 +111,5 @@ def subgraph_to_batch(
         layer_dst=layer_dst,
         layer_src=layer_src,
         layer_etype=layer_et,
+        layer_cnt=layer_cnt,
     )

@@ -14,7 +14,14 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.ops import gnn_aggregate, segment_spmm_ref
+from repro.kernels.ops import (
+    gather_spmm_ref,
+    gnn_aggregate,
+    gnn_gat_aggregate,
+    gnn_gather_aggregate,
+    gnn_segment_max,
+    segment_spmm_ref,
+)
 
 GNN_KINDS = ("gcn", "sage", "gat", "hgt")
 
@@ -27,6 +34,14 @@ def _seg_sum(msg, seg, n, use_kernel):
     return segment_spmm_ref(msg, seg, n)
 
 
+def _gather_seg_sum(h, idx, seg, n, use_kernel):
+    """out[s] = sum_{seg[e]==s} h[idx[e]] — fused gather+aggregate when the
+    kernel is on (no [E, D] message array), masked jnp gather otherwise."""
+    if use_kernel:
+        return gnn_gather_aggregate(h, idx, seg, n)
+    return gather_spmm_ref(h, idx, seg, n)
+
+
 def _seg_count(seg, n, use_kernel=False):
     ones = (seg >= 0).astype(jnp.float32)[:, None]
     return _seg_sum(ones, seg, n, use_kernel)  # [n,1]
@@ -34,12 +49,25 @@ def _seg_count(seg, n, use_kernel=False):
 
 def _seg_softmax(logits, seg, n, use_kernel=False):
     """Softmax over edges grouped by seg (padding seg=-1 excluded)."""
-    neg = jnp.where(seg >= 0, logits, -jnp.inf)
-    mx = jax.ops.segment_max(neg, jnp.maximum(seg, 0), num_segments=n)
-    mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
+    if use_kernel:
+        mx = gnn_segment_max(logits, seg, n)
+    else:
+        neg = jnp.where(seg >= 0, logits, -jnp.inf)
+        mx = jax.ops.segment_max(neg, jnp.maximum(seg, 0), num_segments=n)
+        mx = jnp.where(jnp.isfinite(mx), mx, 0.0)
     e = jnp.where(seg >= 0, jnp.exp(logits - mx[jnp.maximum(seg, 0)]), 0.0)
     z = _seg_sum(e[:, None], seg, n, use_kernel)[:, 0]
     return e / jnp.maximum(z[jnp.maximum(seg, 0)], 1e-9)
+
+
+def _seg_softmax_aggregate(logits, msg, seg, n, use_kernel):
+    """out[s] = sum_e softmax_{seg==s}(logits)[e] * msg[e] — the GAT/HGT
+    per-head inner loop.  One Pallas kernel when enabled, the original
+    3-pass ``_seg_softmax`` + ``_seg_sum`` otherwise."""
+    if use_kernel:
+        return gnn_gat_aggregate(logits, msg, seg, n)
+    alpha = _seg_softmax(logits, seg, n, use_kernel)
+    return _seg_sum(msg * alpha[:, None], seg, n, use_kernel)
 
 
 class GNNModel:
@@ -107,19 +135,25 @@ class GNNModel:
         }
 
     # -- single layer ---------------------------------------------------------
-    def layer(self, p: Params, k: int, h: jax.Array, dst, src, etype) -> jax.Array:
+    def layer(
+        self, p: Params, k: int, h: jax.Array, dst, src, etype, cnt=None
+    ) -> jax.Array:
+        """``cnt`` is the optional precomputed in-degree column ([n, 1],
+        valid-edge counts per destination) — static per batch, so callers
+        with a ``GNNBatch.layer_cnt`` pass it instead of recomputing the
+        segment-count here on every layer call."""
         n = h.shape[0]
         ok = src >= 0
-        hs = jnp.where(ok[:, None], h[jnp.maximum(src, 0)], 0.0)
-        if self.kind == "gcn":
-            agg = _seg_sum(hs, dst, n, self.use_kernel)
-            cnt = _seg_count(dst, n, self.use_kernel) + 1.0
-            return jax.nn.relu(((agg + h) / cnt) @ p["w"] + p["b"])
-        if self.kind == "sage":
-            agg = _seg_sum(hs, dst, n, self.use_kernel)
-            cnt = jnp.maximum(_seg_count(dst, n, self.use_kernel), 1.0)
+        if self.kind in ("gcn", "sage"):
+            # fused path gathers h[src] inside the kernel's edge tiles
+            agg = _gather_seg_sum(h, src, dst, n, self.use_kernel)
+            if cnt is None:
+                cnt = _seg_count(dst, n, self.use_kernel)
+            if self.kind == "gcn":
+                return jax.nn.relu(((agg + h) / (cnt + 1.0)) @ p["w"] + p["b"])
             return jax.nn.relu(
-                jnp.concatenate([h, agg / cnt], axis=1) @ p["w"] + p["b"]
+                jnp.concatenate([h, agg / jnp.maximum(cnt, 1.0)], axis=1) @ p["w"]
+                + p["b"]
             )
         if self.kind == "gat":
             heads, dh = p["a_dst"].shape
@@ -131,9 +165,10 @@ class GNNModel:
             )  # [E, H]
             out = []
             for hd in range(heads):  # few heads; keeps segment ops 2-D
-                alpha = _seg_softmax(e[:, hd], dst, n, self.use_kernel)
                 out.append(
-                    _seg_sum(zsrc[:, hd] * alpha[:, None], dst, n, self.use_kernel)
+                    _seg_softmax_aggregate(
+                        e[:, hd], zsrc[:, hd], dst, n, self.use_kernel
+                    )
                 )
             return jax.nn.elu(jnp.concatenate(out, axis=1))
         if self.kind == "hgt":
@@ -152,17 +187,22 @@ class GNNModel:
             att = (qd * ke).sum(-1) / (dout**0.5)  # [E, H]
             out = []
             for hd in range(heads):
-                alpha = _seg_softmax(att[:, hd], dst, n, self.use_kernel)
-                msg = jnp.where(ok[:, None], ve[:, hd] * alpha[:, None], 0.0)
-                out.append(_seg_sum(msg, dst, n, self.use_kernel))
+                msg = jnp.where(ok[:, None], ve[:, hd], 0.0)
+                out.append(
+                    _seg_softmax_aggregate(att[:, hd], msg, dst, n, self.use_kernel)
+                )
             agg = jnp.concatenate(out, axis=1) @ p["wo"]
             return jax.nn.gelu(agg + h @ p["wskip"])
         raise ValueError(self.kind)
 
     # -- full apply --------------------------------------------------------------
     def apply(self, params: Params, batch) -> jax.Array:
-        """batch: GNNBatch (feats/valid/layer_* as jnp arrays)."""
+        """batch: GNNBatch (feats/valid/layer_* as jnp arrays).  When the
+        batch carries precomputed per-layer degree columns (``layer_cnt``,
+        built host-side in ``subgraph_to_batch``), GCN/SAGE skip the
+        per-layer segment-count entirely."""
         h = batch.feats
+        cnts = getattr(batch, "layer_cnt", None)
         for k in range(self.num_layers):
             h = self.layer(
                 params["layers"][k],
@@ -171,6 +211,7 @@ class GNNModel:
                 batch.layer_dst[k],
                 batch.layer_src[k],
                 batch.layer_etype[k],
+                cnt=None if cnts is None else cnts[k],
             )
             h = h * batch.valid[:, None]
         return h[batch.seed_pos] @ params["out"]
@@ -227,9 +268,8 @@ class GNNModel:
                 )  # [E, H]
                 out = []
                 for hd in range(hh):
-                    alpha = _seg_softmax(e[:, hd], seg, n, use_kernel)
                     out.append(
-                        _seg_sum(zsrc[:, hd] * alpha[:, None], seg, n, use_kernel)
+                        _seg_softmax_aggregate(e[:, hd], zsrc[:, hd], seg, n, use_kernel)
                     )
                 return jax.nn.elu(jnp.concatenate(out, axis=1))
             if kind == "hgt":
@@ -244,9 +284,10 @@ class GNNModel:
                 att = (qd * ke).sum(-1) / (dout**0.5)  # [E, H]
                 out = []
                 for hd in range(heads):
-                    alpha = _seg_softmax(att[:, hd], seg, n, use_kernel)
-                    msg = jnp.where(ok[:, None], ve[:, hd] * alpha[:, None], 0.0)
-                    out.append(_seg_sum(msg, seg, n, use_kernel))
+                    msg = jnp.where(ok[:, None], ve[:, hd], 0.0)
+                    out.append(
+                        _seg_softmax_aggregate(att[:, hd], msg, seg, n, use_kernel)
+                    )
                 agg = jnp.concatenate(out, axis=1) @ p["wo"]
                 return jax.nn.gelu(agg + h_self @ p["wskip"])
             raise ValueError(kind)
@@ -263,6 +304,19 @@ class GNNModel:
                 jax_fn(jnp.asarray(h_self), jnp.asarray(h_nbr), sg, et)
             )
 
+        def kernel_shapes(num_edges, num_vertices, in_dim):
+            """(op, (edges, segments, dim)) tuples this slice dispatches at
+            the given bucket — the engine hands them to the autotuner before
+            a bucket's first jit trace so tuned blocks bake into the compile."""
+            if kind in ("gcn", "sage"):
+                return [
+                    ("segment_spmm_ragged", (num_edges, num_vertices, in_dim)),
+                    ("segment_spmm_ragged", (num_edges, num_vertices, 1)),
+                ]
+            dh = p["a_dst"].shape[1] if kind == "gat" else p["wo"].shape[0] // heads
+            return [("gat_softmax_aggregate", (num_edges, num_vertices, dh))]
+
         fn.jax = jax_fn
         fn.needs_etype = kind == "hgt"
+        fn.kernel_shapes = kernel_shapes
         return fn

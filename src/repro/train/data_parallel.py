@@ -107,6 +107,16 @@ def stack_batches(batches: list[GNNBatch]) -> GNNBatch:
             np.stack([pad0(b.layer_etype[k], emax[k], 0) for b in batches])
             for k in range(num_layers)
         ],
+        # degree columns are per-vertex-row, so the vertex pad (zero
+        # count) keeps them consistent with the -1-padded edge lists
+        layer_cnt=(
+            [
+                np.stack([pad0(b.layer_cnt[k], vmax, 0.0) for b in batches])
+                for k in range(num_layers)
+            ]
+            if all(b.layer_cnt is not None for b in batches)
+            else None
+        ),
     )
 
 

@@ -1,0 +1,38 @@
+"""KRN001: pallas_call interpret plumbing + *_ref oracle coverage."""
+import jax
+from jax.experimental import pallas as pl
+
+INTERPRET = True
+
+
+def _kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def gather_spmm_pallas(x, *, interpret: bool = True):  # oracle exists: fine
+    return pl.pallas_call(_kernel, out_shape=x, interpret=True)(x)  # expect[KRN001]
+
+
+def segment_max_pallas(x, *, interpret: bool = True):  # oracle exists: fine
+    return pl.pallas_call(_kernel, out_shape=x)(x)  # expect[KRN001]
+
+
+def ssd_scan_pallas(x):  # oracle exists, but no interpret parameter
+    return pl.pallas_call(_kernel, out_shape=x, interpret=INTERPRET)(x)  # expect[KRN001]
+
+
+def fancy_scan_pallas(x, *, interpret: bool = True):  # expect[KRN001]
+    # interpret is plumbed correctly, but repro.kernels.ref exports no
+    # fancy_scan_ref oracle to allclose this kernel against
+    return pl.pallas_call(_kernel, out_shape=x, interpret=interpret)(x)
+
+
+MODULE_SCOPE = pl.pallas_call(_kernel, out_shape=jax.ShapeDtypeStruct((8,), "float32"))  # expect[KRN001]
+
+
+def segment_spmm_pallas(x, *, interpret: bool = True):  # clean: plumbed + oracle
+    return pl.pallas_call(_kernel, out_shape=x, interpret=interpret)(x)
+
+
+def _launch(kernel, x, interpret):  # clean: private helper plumbs interpret
+    return pl.pallas_call(kernel, out_shape=x, interpret=interpret)(x)

@@ -93,7 +93,7 @@ def test_rule_catalog_metadata():
     ids = [r.id for r in rules]
     assert len(ids) == len(set(ids))
     for r in rules:
-        assert r.family in ("determinism", "jax", "project")
+        assert r.family in ("determinism", "jax", "kernels", "project")
         assert r.rationale.strip()
         assert re.fullmatch(r"[A-Z]{3}\d{3}", r.id)
 

@@ -236,3 +236,76 @@ def test_engine_reuse_no_recompile_across_calls(small_graph, tmp_path):
     # a different resolved signature must NOT reuse the cached engine
     system.infer_layerwise(fns, str(tmp_path / "emb2"), **kw)
     assert system.infer_engine is not engine
+
+
+def test_layer_stats_padding_counters(small_graph, sampling_client, tmp_path):
+    """The bucketed engine accounts real vs padded rows per layer: the
+    waste the ragged kernels' tile skip saves is visible in LayerStats."""
+    import jax
+
+    from repro.models.gnn import GNNModel
+
+    model = GNNModel("sage", 16, hidden=16, num_layers=2)
+    params = model.init(jax.random.PRNGKey(0))
+    fns = [model.embed_layer_fn(params, k) for k in range(2)]
+    eng = LayerwiseInferenceEngine(
+        small_graph, sampling_client, fns, small_graph.vertex_feats,
+        str(tmp_path), fanouts=[10, 10], chunk_rows=128, out_dims=[16, 16],
+        batch_size=256,
+    )
+    res = eng.run()
+    for s in res.layer_stats:
+        assert 0 < s.batch_rows <= s.padded_rows
+        assert 0 < s.batch_edges <= s.padded_edges
+        assert 0.0 < s.occupancy() <= 1.0
+        assert 0.0 < s.edge_occupancy() <= 1.0
+        # batches land in (vertex-bucket, edge-bucket) bins; the bin counts
+        # must add up to the dispatched batches and every bin is a padded
+        # shape (at least as large as one real row)
+        assert sum(s.bucket_batches.values()) >= 1
+        for bp, ep in s.bucket_batches:
+            assert bp >= 1 and ep >= 1 and bp <= eng.batch_size
+
+
+def test_engine_kernel_autotune_before_first_trace(
+    small_graph, sampling_client, tmp_path
+):
+    """kernel_autotune=True sweeps each advertised (op, shape) before the
+    bucket's first jit trace, so tuned blocks bake into the one compile per
+    (layer, bucket) — recompile_guard still holds with kernels enabled."""
+    import os
+
+    import jax
+
+    from repro.analysis import recompile_guard
+    from repro.kernels import autotune as at
+    from repro.models.gnn import GNNModel
+
+    at.reset()
+    try:
+        model = GNNModel("sage", 16, hidden=16, num_layers=2)
+        params = model.init(jax.random.PRNGKey(0))
+        fns = [model.embed_layer_fn(params, k) for k in range(2)]
+        cache = str(tmp_path / "tune")
+        eng = LayerwiseInferenceEngine(
+            small_graph, sampling_client, fns, small_graph.vertex_feats,
+            str(tmp_path / "emb"), fanouts=[8, 4], chunk_rows=128,
+            out_dims=[16, 16], batch_size=512, use_kernel=True,
+            kernel_autotune=True, kernel_cache_dir=cache,
+        )
+        with recompile_guard(eng) as rec:
+            res = eng.run()
+        assert res.slice_compiles > 0
+        assert rec.compiles == rec.new_shapes  # one compile per (layer, bucket)
+        assert at.stats()["measured"] > 0
+        assert os.path.exists(at.artifact_path(cache))
+        import json as _json
+
+        configs = _json.load(open(at.artifact_path(cache)))["configs"]
+        assert any(k.startswith("segment_spmm_ragged/") for k in configs)
+        # a second run re-uses both the tuned table and the jit caches
+        with recompile_guard(eng) as rec2:
+            eng.run()
+        assert (rec2.compiles, rec2.new_shapes) == (0, 0)
+    finally:
+        at.reset()
